@@ -1,0 +1,13 @@
+"""Shared helpers: CSV emission + claim checks printed as derived rows."""
+from __future__ import annotations
+
+import sys
+
+
+def emit(name: str, value, derived: str = ""):
+    print(f"{name},{value},{derived}")
+
+
+def check(name: str, cond: bool, detail: str = ""):
+    emit(f"claim/{name}", "PASS" if cond else "FAIL", detail)
+    return cond

@@ -1,0 +1,46 @@
+"""Fig. 9 — OffloadPrep scalability: 1..8 initiators offload 1/3 of each
+minibatch to the shared storage node under admission policies.
+
+Claims: NoOffload epoch ≈ flat (18→22 s-class growth from shared volume);
+AcceptAll best until ~4 then COLLAPSES at 8 (storage CPU > 80%);
+RejectAll ≈ NoOffload + negligible penalty (cheap rejected RPCs);
+CPU-threshold avoids the collapse; Token ≈ CPU + ~3% (fewer rejections).
+"""
+from __future__ import annotations
+
+from benchmarks.common import check, emit
+from repro.sim.prepmodel import PrepParams, run_prep
+
+INSTANCES = [1, 2, 4, 8]
+
+
+def series(tag, policy, ratio=1 / 3):
+    out = {}
+    for n in INSTANCES:
+        p = PrepParams(system="offloadfs", offload_ratio=ratio, target="storage")
+        r = run_prep(p, instances=n, policy=policy)
+        out[n] = r.epoch_time
+        emit(f"fig9/{tag}/{n}", f"{r.epoch_time:.2f}",
+             f"storage_cpu={r.storage_cpu_util:.2f} rej={r.rejected}")
+    return out
+
+
+def main():
+    noopt = series("nooffload", "reject", ratio=0.0)
+    rej = series("rejectall", "reject")
+    acc = series("acceptall", "accept")
+    cpu = series("cpu", "cpu:0.8")
+    tok = series("token", "token:4:0.25")
+
+    check("fig9/acceptall_faster_at_4", acc[4] < noopt[4], "")
+    check("fig9/acceptall_collapses_at_8",
+          acc[8] > acc[4] * 1.5, f"{acc[8]:.1f}s vs {acc[4]:.1f}s @4")
+    check("fig9/rejectall_penalty_negligible",
+          rej[8] < noopt[8] * 1.08, "rejected RPCs are cheap")
+    check("fig9/cpu_avoids_collapse", cpu[8] < acc[8], "")
+    check("fig9/token_within_3pct_of_cpu",
+          tok[8] < cpu[8] * 1.05, f"token {tok[8]:.1f}s vs cpu {cpu[8]:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper figure (+ the roofline report).
+Prints ``name,value,derived`` CSV rows; claim checks appear as
+``claim/<name>,PASS|FAIL``. Usage: PYTHONPATH=src python -m benchmarks.run
+"""
+import importlib
+import sys
+import time
+
+MODULES = [
+    "benchmarks.fig2_fs_overhead",
+    "benchmarks.fig7a_offload_levels",
+    "benchmarks.fig7b_prep_ratio",
+    "benchmarks.fig8_db_scalability",
+    "benchmarks.fig9_prep_scalability",
+    "benchmarks.fig10_designs",
+    "benchmarks.fig11_latency_throughput",
+    "benchmarks.fig12_cache_timeline",
+    "benchmarks.fig13_cache_pollution",
+    "benchmarks.roofline_report",
+]
+
+
+def main() -> int:
+    t0 = time.time()
+    failures = 0
+    for mod in MODULES:
+        print(f"# === {mod} ===", flush=True)
+        t = time.time()
+        try:
+            importlib.import_module(mod).main()
+        except Exception as e:  # noqa: BLE001
+            print(f"claim/{mod}/crashed,FAIL,{type(e).__name__}: {e}")
+            failures += 1
+        print(f"# {mod} took {time.time()-t:.1f}s", flush=True)
+    print(f"# total {time.time()-t0:.1f}s")
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+"""OffloadPrep demo: image preprocessing split between the training host,
+the storage node and a peer node, governed by admission control.
+
+    PYTHONPATH=src python examples/prep_pipeline.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.core import BlockDevice, CPUThreshold, OffloadFS, RpcFabric, TokenRing
+from repro.core.engine import OffloadEngine
+from repro.core.offloader import TaskOffloader, serve_engine
+from repro.data.offload_prep import OffloadPrep, stub_preprocess
+
+
+def main():
+    dev = BlockDevice(num_blocks=1 << 18)
+    fs = OffloadFS(dev, node="trainer0")
+    fabric = RpcFabric()
+
+    storage = OffloadEngine(fs, node="storage0", cache_blocks=4096)
+    storage.register_stub("preprocess", stub_preprocess)
+    peer = OffloadEngine(fs, node="peer1", cache_blocks=1024)
+    peer.register_stub("preprocess", stub_preprocess)
+    # the storage node protects itself with a token ring; the peer accepts all
+    serve_engine(storage, fabric, TokenRing(n_tokens=2, ttl=1.0))
+    from repro.core.admission import AcceptAll
+
+    serve_engine(peer, fabric, AcceptAll())
+
+    off = TaskOffloader(fs, fabric, node="trainer0")
+    prep = OffloadPrep(fs, off, out_size=64, offload_ratio=1 / 3,
+                       targets=("storage0", "peer1"))
+    paths = prep.materialize_corpus(64, max_side=192)
+    print(f"corpus: {len(paths)} images on the disaggregated volume")
+
+    t0 = time.time()
+    for epoch in range(2):
+        for mb in range(0, len(paths), 16):
+            batch = prep.preprocess_minibatch(paths[mb : mb + 16], epoch_seed=epoch)
+        print(f"epoch {epoch}: minibatches ok, last batch {batch.shape}")
+    print(f"stats: {prep.stats} ({time.time()-t0:.1f}s)")
+    print(f"storage ran {storage.tasks_run} tasks, peer ran {peer.tasks_run}")
+    print(f"rpc bytes {fabric.total_bytes()/1e6:.2f} MB "
+          "(tensors return over the fabric; images stay near-data)")
+
+
+if __name__ == "__main__":
+    main()

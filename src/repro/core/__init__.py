@@ -1,0 +1,24 @@
+"""OffloadFS — the paper's contribution (Moon et al., 2026).
+
+An initiator-centric user-level file system for disaggregated storage:
+the initiator owns ALL metadata (inode table, extent trees, free space);
+I/O-intensive tasks are offloaded to the storage node (or a peer initiator)
+via RPC with explicit block authorization — no distributed lock manager.
+
+Functional layer (this package): every subsystem really executes — real
+bytes through the block device, real extents, real caches, real recovery.
+Performance layer: ``repro.sim`` replays the traced operation streams
+through a calibrated discrete-event simulator (benchmarks/).
+"""
+from repro.core.blockdev import BLOCK_SIZE, BlockDevice  # noqa: F401
+from repro.core.extents import Extent, ExtentManager  # noqa: F401
+from repro.core.fs import OffloadFS  # noqa: F401
+from repro.core.rpc import RpcFabric  # noqa: F401
+from repro.core.engine import OffloadEngine  # noqa: F401
+from repro.core.offloader import TaskOffloader  # noqa: F401
+from repro.core.admission import (  # noqa: F401
+    AcceptAll,
+    CPUThreshold,
+    RejectAll,
+    TokenRing,
+)

@@ -1,0 +1,133 @@
+"""Multi-tenancy admission control for the shared storage node (paper §III-B).
+
+Two production policies plus the AcceptAll/RejectAll endpoints used in the
+scalability study (Figs. 8–9):
+
+  * CPUThreshold — reactive: reject offload requests when the storage
+    node's CPU utilization exceeds a threshold; rejected tasks run on the
+    initiator itself.
+  * TokenRing — proactive: a fixed number of tokens circulate among
+    registered initiators; a Task Offloader may submit only while holding a
+    token. Tokens expire (TTL) and are reclaimed for fairness.
+
+Time is injectable (logical clock) so tests and the DES are deterministic.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Callable, Dict, Optional
+
+
+class AdmissionPolicy:
+    name = "base"
+
+    def admit(self, initiator: str) -> bool:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def register(self, initiator: str) -> None:
+        pass
+
+    def complete(self, initiator: str) -> None:
+        pass
+
+
+class AcceptAll(AdmissionPolicy):
+    name = "accept_all"
+
+    def admit(self, initiator: str) -> bool:
+        return True
+
+
+class RejectAll(AdmissionPolicy):
+    name = "reject_all"
+
+    def admit(self, initiator: str) -> bool:
+        return False
+
+
+class CPUThreshold(AdmissionPolicy):
+    """Reject when cpu_probe() exceeds `threshold` (paper default 80%)."""
+
+    name = "cpu"
+
+    def __init__(self, cpu_probe: Callable[[], float], threshold: float = 0.8):
+        self.cpu_probe = cpu_probe
+        self.threshold = threshold
+        self.rejections = 0
+
+    def admit(self, initiator: str) -> bool:
+        ok = self.cpu_probe() < self.threshold
+        if not ok:
+            self.rejections += 1
+        return ok
+
+
+class TokenRing(AdmissionPolicy):
+    """`n_tokens` circulate among registered initiators; TTL-expired tokens
+    are reclaimed and passed on (fairness: round-robin hand-off)."""
+
+    name = "token"
+
+    def __init__(self, n_tokens: int = 4, ttl: float = 1.0,
+                 clock: Optional[Callable[[], float]] = None):
+        self.n_tokens = n_tokens
+        self.ttl = ttl
+        self._clock = clock or self._logical
+        self._t = 0.0
+        self._lock = threading.Lock()
+        self._ring: deque = deque()  # registered initiators, round-robin
+        self._holders: Dict[str, float] = {}  # initiator -> expiry time
+        self._starved: deque = deque()  # reclaimed-from, for rotation
+
+    def _logical(self) -> float:
+        self._t += 0.01
+        return self._t
+
+    def register(self, initiator: str) -> None:
+        with self._lock:
+            if initiator not in self._ring:
+                self._ring.append(initiator)
+
+    def _reclaim(self, now: float) -> None:
+        expired = [i for i, exp in self._holders.items() if exp <= now]
+        for i in expired:
+            del self._holders[i]  # token returns to the pool
+
+    def admit(self, initiator: str) -> bool:
+        with self._lock:
+            if initiator not in self._ring:
+                self._ring.append(initiator)
+            now = self._clock()
+            self._reclaim(now)
+            if initiator in self._holders:
+                return True
+            free = self.n_tokens - len(self._holders)
+            if free <= 0:
+                if initiator not in self._starved:
+                    self._starved.append(initiator)
+                return False
+            # starvation-queue discipline: a free token goes to the caller
+            # only if every node queued AHEAD of it could also be served by
+            # the remaining free tokens — guarantees eventual admission
+            try:
+                idx = list(self._starved).index(initiator)
+            except ValueError:
+                idx = len(self._starved)
+            if idx < free:
+                if initiator in self._starved:
+                    self._starved.remove(initiator)
+                self._holders[initiator] = now + self.ttl
+                return True
+            if initiator not in self._starved:
+                self._starved.append(initiator)
+            return False
+
+    def complete(self, initiator: str) -> None:
+        """Voluntary early release on task completion."""
+        with self._lock:
+            self._holders.pop(initiator, None)
+
+    def holders(self):
+        with self._lock:
+            return dict(self._holders)

@@ -1,0 +1,80 @@
+"""Simulated NVMeoF block device (PoseidonOS logical volume stand-in).
+
+Real bytes move through a sparse block store (dict of block → bytes), so a
+"200 GB" volume costs memory only for blocks actually written. Every
+operation emits a trace event (node, op, blocks) consumed by the DES
+performance layer; the functional layer is deterministic and thread-safe.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+BLOCK_SIZE = 4096
+
+
+@dataclass
+class TraceEvent:
+    node: str
+    op: str  # read | write
+    block: int
+    nblocks: int
+
+
+class BlockDevice:
+    """A logical volume of `num_blocks` blocks of BLOCK_SIZE bytes."""
+
+    def __init__(self, num_blocks: int, name: str = "vol0"):
+        self.name = name
+        self.num_blocks = num_blocks
+        self._blocks: Dict[int, bytes] = {}
+        self._lock = threading.Lock()
+        self.tracer: Optional[Callable[[TraceEvent], None]] = None
+        self.reads = 0
+        self.writes = 0
+
+    # ------------------------------------------------------------- block IO
+    def _check(self, block: int, n: int):
+        if block < 0 or block + n > self.num_blocks:
+            raise IOError(f"block range [{block}, {block + n}) out of volume bounds")
+
+    def read_blocks(self, block: int, n: int, *, node: str = "?") -> bytes:
+        self._check(block, n)
+        with self._lock:
+            out = b"".join(
+                self._blocks.get(b, b"\x00" * BLOCK_SIZE)
+                for b in range(block, block + n)
+            )
+            self.reads += n
+        if self.tracer:
+            self.tracer(TraceEvent(node, "read", block, n))
+        return out
+
+    def write_blocks(self, block: int, data: bytes, *, node: str = "?") -> None:
+        n = (len(data) + BLOCK_SIZE - 1) // BLOCK_SIZE
+        self._check(block, n)
+        if len(data) % BLOCK_SIZE:
+            data = data + b"\x00" * (BLOCK_SIZE - len(data) % BLOCK_SIZE)
+        with self._lock:
+            for i in range(n):
+                self._blocks[block + i] = bytes(
+                    data[i * BLOCK_SIZE : (i + 1) * BLOCK_SIZE]
+                )
+            self.writes += n
+        if self.tracer:
+            self.tracer(TraceEvent(node, "write", block, n))
+
+    def trim(self, block: int, n: int) -> None:
+        self._check(block, n)
+        with self._lock:
+            for b in range(block, block + n):
+                self._blocks.pop(b, None)
+
+    # ------------------------------------------------------------ stats
+    @property
+    def used_blocks(self) -> int:
+        return len(self._blocks)
+
+    def reset_counters(self):
+        self.reads = self.writes = 0

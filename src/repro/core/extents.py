@@ -1,0 +1,129 @@
+"""Extent allocator + per-file extent trees — initiator-owned metadata.
+
+The paper's *initiator-centric block management policy*: only the initiator
+allocates/frees blocks; offloaded tasks receive pre-allocated physical block
+addresses as RPC arguments. Invariants (property-tested):
+  * no double allocation, no overlap;
+  * free-space accounting exact; adjacent free runs merge;
+  * file extent trees map disjoint file ranges to disjoint block runs.
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Extent:
+    """A contiguous run of physical blocks backing a file range."""
+
+    file_offset: int  # in blocks
+    block: int  # physical start block
+    nblocks: int
+
+    @property
+    def end(self) -> int:
+        return self.block + self.nblocks
+
+
+class ExtentManager:
+    """First-fit free-list allocator over a block volume."""
+
+    def __init__(self, num_blocks: int, reserved: int = 0):
+        self.num_blocks = num_blocks
+        # sorted list of (start, length) free runs
+        self._free: List[Tuple[int, int]] = [(reserved, num_blocks - reserved)]
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ alloc
+    def alloc(self, nblocks: int) -> List[Extent]:
+        """Allocate nblocks (possibly as multiple extents). Raises when the
+        volume is full. Returned extents carry file_offset=0 — the caller
+        (fs.py) rebases them into the file's extent tree."""
+        if nblocks <= 0:
+            raise ValueError("alloc of non-positive size")
+        out: List[Extent] = []
+        need = nblocks
+        with self._lock:
+            i = 0
+            while need > 0 and i < len(self._free):
+                start, length = self._free[i]
+                take = min(length, need)
+                out.append(Extent(0, start, take))
+                if take == length:
+                    self._free.pop(i)
+                else:
+                    self._free[i] = (start + take, length - take)
+                    i += 1
+                need -= take
+            if need > 0:
+                # roll back
+                for e in out:
+                    self._free_run(e.block, e.nblocks)
+                raise IOError(f"volume full: wanted {nblocks} blocks")
+        return out
+
+    def _free_run(self, start: int, length: int):
+        """Insert a free run, merging neighbours (lock held)."""
+        i = bisect.bisect_left(self._free, (start, 0))
+        # check overlap with predecessor/successor
+        if i > 0:
+            ps, pl = self._free[i - 1]
+            if ps + pl > start:
+                raise ValueError(f"double free: [{start},{start+length}) overlaps [{ps},{ps+pl})")
+        if i < len(self._free):
+            ns, nl = self._free[i]
+            if start + length > ns:
+                raise ValueError(f"double free: [{start},{start+length}) overlaps [{ns},{ns+nl})")
+        self._free.insert(i, (start, length))
+        # merge with next
+        if i + 1 < len(self._free):
+            s2, l2 = self._free[i + 1]
+            if start + length == s2:
+                self._free[i] = (start, length + l2)
+                self._free.pop(i + 1)
+        # merge with prev
+        if i > 0:
+            s0, l0 = self._free[i - 1]
+            s1, l1 = self._free[i]
+            if s0 + l0 == s1:
+                self._free[i - 1] = (s0, l0 + l1)
+                self._free.pop(i)
+
+    def free(self, extents: List[Extent]):
+        with self._lock:
+            for e in extents:
+                self._free_run(e.block, e.nblocks)
+
+    def carve(self, start: int, length: int) -> None:
+        """Remove a specific run from the free list (mount-time rebuild)."""
+        with self._lock:
+            for i, (s, l) in enumerate(self._free):
+                if s <= start and start + length <= s + l:
+                    self._free.pop(i)
+                    if s < start:
+                        self._free.insert(i, (s, start - s))
+                        i += 1
+                    if start + length < s + l:
+                        self._free.insert(i, (start + length, s + l - (start + length)))
+                    return
+            raise ValueError(f"carve [{start},{start+length}) not free")
+
+    # ------------------------------------------------------------ stats
+    @property
+    def free_blocks(self) -> int:
+        with self._lock:
+            return sum(l for _, l in self._free)
+
+    def fragmentation(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    def defragment_hint(self) -> Optional[Tuple[int, int]]:
+        """Largest free run (defrag target metric)."""
+        with self._lock:
+            if not self._free:
+                return None
+            return max(self._free, key=lambda t: t[1])

@@ -1,0 +1,320 @@
+"""OffloadFS — initiator-centric user-level file system.
+
+The initiator node exclusively owns the inode table and extent trees.
+Offloaded tasks access data ONLY through ``offload_read``/``offload_write``
+with block addresses the initiator authorized (leases). While a lease is
+outstanding, the initiator itself must not touch those blocks — this is the
+paper's replacement for a distributed lock manager: there is never
+concurrent conflicting access by construction.
+
+No directory-task offloading; inode/extent mutations (create, truncate,
+fallocate, stat) happen only on the initiator.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.blockdev import BLOCK_SIZE, BlockDevice
+from repro.core.extents import Extent, ExtentManager
+
+
+@dataclass
+class Inode:
+    ino: int
+    path: str
+    size: int = 0  # bytes
+    mtime: float = 0.0  # logical clock
+    extents: List[Extent] = field(default_factory=list)  # sorted by file_offset
+
+
+@dataclass
+class Lease:
+    """Authorization for an offloaded task to touch specific blocks."""
+
+    task_id: int
+    read_blocks: frozenset
+    write_blocks: frozenset
+    done: bool = False
+
+
+class LeaseViolation(Exception):
+    pass
+
+
+SB_BLOCKS = 64  # superblock area (metadata persistence), 256 KiB
+
+
+class OffloadFS:
+    """One instance per initiator node (single-writer metadata)."""
+
+    def __init__(self, dev: BlockDevice, *, node: str = "initiator0",
+                 reserved_blocks: int = SB_BLOCKS):
+        self.dev = dev
+        self.node = node
+        self.extmgr = ExtentManager(dev.num_blocks, reserved=reserved_blocks)
+        self._inodes: Dict[int, Inode] = {}
+        self._names: Dict[str, int] = {}
+        self._ino_counter = itertools.count(1)
+        self._task_counter = itertools.count(1)
+        self._leases: Dict[int, Lease] = {}
+        self._leased_blocks: Dict[int, int] = {}  # block -> task_id
+        self._lock = threading.RLock()
+        self._clock = 0.0
+
+    # --------------------------------------------------------------- clock
+    def _tick(self) -> float:
+        self._clock += 1.0
+        return self._clock
+
+    # ----------------------------------------------------------- superblock
+    # The initiator's metadata (inode table + extent trees) persists in the
+    # reserved block area so a crashed initiator can re-mount the volume.
+    def flush_metadata(self) -> None:
+        import pickle as _pkl
+        import zlib
+
+        with self._lock:
+            blob = _pkl.dumps(
+                {
+                    "names": dict(self._names),
+                    "inodes": {
+                        i: (n.path, n.size, n.mtime,
+                            [(e.file_offset, e.block, e.nblocks) for e in n.extents])
+                        for i, n in self._inodes.items()
+                    },
+                    "clock": self._clock,
+                }
+            )
+            hdr = len(blob).to_bytes(8, "little") + zlib.crc32(blob).to_bytes(4, "little")
+            buf = hdr + blob
+            cap = SB_BLOCKS * BLOCK_SIZE
+            if len(buf) > cap:
+                raise IOError(f"superblock overflow ({len(buf)} > {cap})")
+            self.dev.write_blocks(0, buf, node=self.node)
+
+    @classmethod
+    def mount(cls, dev: BlockDevice, *, node: str = "initiator0") -> "OffloadFS":
+        import pickle as _pkl
+        import zlib
+
+        fs = cls(dev, node=node)
+        raw = dev.read_blocks(0, SB_BLOCKS, node=node)
+        size = int.from_bytes(raw[:8], "little")
+        if size == 0 or size > SB_BLOCKS * BLOCK_SIZE:
+            return fs  # fresh volume
+        blob = raw[12 : 12 + size]
+        if zlib.crc32(blob) != int.from_bytes(raw[8:12], "little"):
+            return fs  # torn superblock: fresh mount (last commit wins upstream)
+        meta = _pkl.loads(blob)
+        fs._names = dict(meta["names"])
+        fs._clock = meta["clock"]
+        max_ino = 0
+        used: List[Extent] = []
+        for i, (path, size_, mtime, exts) in meta["inodes"].items():
+            extents = [Extent(fo, b, n) for fo, b, n in exts]
+            fs._inodes[i] = Inode(i, path, size_, mtime, extents)
+            used.extend(extents)
+            max_ino = max(max_ino, i)
+        fs._ino_counter = itertools.count(max_ino + 1)
+        # rebuild the free list: everything minus used extents
+        fs.extmgr = ExtentManager(dev.num_blocks, reserved=SB_BLOCKS)
+        for e in sorted(used, key=lambda e: e.block):
+            # carve out of the free list by allocating exactly that run
+            fs.extmgr.carve(e.block, e.nblocks)
+        return fs
+
+    # ------------------------------------------------------------ metadata
+    def create(self, path: str) -> int:
+        with self._lock:
+            if path in self._names:
+                raise FileExistsError(path)
+            ino = next(self._ino_counter)
+            self._inodes[ino] = Inode(ino, path, mtime=self._tick())
+            self._names[path] = ino
+            return ino
+
+    def open(self, path: str) -> int:
+        with self._lock:
+            if path not in self._names:
+                raise FileNotFoundError(path)
+            return self._names[path]
+
+    def exists(self, path: str) -> bool:
+        with self._lock:
+            return path in self._names
+
+    def listdir(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            return sorted(p for p in self._names if p.startswith(prefix))
+
+    def stat(self, path: str) -> Inode:
+        with self._lock:
+            return self._inodes[self._names[path]]
+
+    def delete(self, path: str) -> None:
+        with self._lock:
+            ino = self._names[path]
+            inode = self._inodes[ino]
+            self._check_not_leased(
+                b for e in inode.extents for b in range(e.block, e.block + e.nblocks)
+            )
+            del self._names[path]
+            del self._inodes[ino]
+            self.extmgr.free(inode.extents)
+            for e in inode.extents:
+                self.dev.trim(e.block, e.nblocks)
+
+    def rename(self, old: str, new: str) -> None:
+        with self._lock:
+            ino = self._names.pop(old)
+            self._names[new] = ino
+            self._inodes[ino].path = new
+
+    def truncate(self, path: str, size: int) -> None:
+        with self._lock:
+            inode = self._inodes[self._names[path]]
+            nblocks = (size + BLOCK_SIZE - 1) // BLOCK_SIZE
+            keep, drop = [], []
+            for e in inode.extents:
+                if e.file_offset + e.nblocks <= nblocks:
+                    keep.append(e)
+                elif e.file_offset >= nblocks:
+                    drop.append(e)
+                else:
+                    cut = nblocks - e.file_offset
+                    keep.append(Extent(e.file_offset, e.block, cut))
+                    drop.append(Extent(e.file_offset + cut, e.block + cut, e.nblocks - cut))
+            self.extmgr.free(drop)
+            inode.extents = keep
+            inode.size = min(inode.size, size)
+            inode.mtime = self._tick()
+
+    def fallocate(self, path: str, size: int) -> List[Extent]:
+        """Preallocate blocks so their physical addresses can be handed to an
+        offloaded task (the paper's pre-allocation step for output files)."""
+        with self._lock:
+            inode = self._inodes[self._names[path]]
+            have = sum(e.nblocks for e in inode.extents)
+            need = (size + BLOCK_SIZE - 1) // BLOCK_SIZE - have
+            if need > 0:
+                new = self.extmgr.alloc(need)
+                off = have
+                for e in new:
+                    inode.extents.append(Extent(off, e.block, e.nblocks))
+                    off += e.nblocks
+            inode.size = max(inode.size, size)
+            inode.mtime = self._tick()
+            return list(inode.extents)
+
+    # ------------------------------------------------------------ file IO
+    def _extent_blocks(self, inode: Inode, offset: int, length: int):
+        """Yield (physical_block, nblocks) runs covering [offset, offset+length)."""
+        first = offset // BLOCK_SIZE
+        last = (offset + length + BLOCK_SIZE - 1) // BLOCK_SIZE
+        for e in inode.extents:
+            lo = max(first, e.file_offset)
+            hi = min(last, e.file_offset + e.nblocks)
+            if lo < hi:
+                yield e.block + (lo - e.file_offset), hi - lo
+
+    def write(self, path: str, data: bytes, offset: int = 0) -> int:
+        """Initiator-side write (foreground I/O — e.g. WAL, MANIFEST).
+        Block-aligned offsets only (the LSM layer writes aligned)."""
+        if offset % BLOCK_SIZE:
+            raise ValueError("unaligned write")
+        with self._lock:
+            inode = self._inodes[self._names[path]]
+            end = offset + len(data)
+            self.fallocate(path, max(inode.size, end))
+            runs = list(self._extent_blocks(inode, offset, len(data)))
+            self._check_not_leased(
+                b for blk, n in runs for b in range(blk, blk + n)
+            )
+            pos = 0
+            for blk, n in runs:
+                chunk = data[pos : pos + n * BLOCK_SIZE]
+                self.dev.write_blocks(blk, chunk, node=self.node)
+                pos += n * BLOCK_SIZE
+                if pos >= len(data):
+                    break
+            inode.size = max(inode.size, end)
+            inode.mtime = self._tick()
+            return len(data)
+
+    def read(self, path: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        with self._lock:
+            inode = self._inodes[self._names[path]]
+            if length is None:
+                length = inode.size - offset
+            length = max(0, min(length, inode.size - offset))
+            if length == 0:
+                return b""
+            first_blk = offset // BLOCK_SIZE
+            skip = offset - first_blk * BLOCK_SIZE
+            out = []
+            got = 0
+            for blk, n in self._extent_blocks(inode, offset, length):
+                out.append(self.dev.read_blocks(blk, n, node=self.node))
+                got += n * BLOCK_SIZE
+            buf = b"".join(out)
+            return buf[skip : skip + length]
+
+    # ----------------------------------------------------------- leases
+    def _check_not_leased(self, blocks) -> None:
+        for b in blocks:
+            if b in self._leased_blocks:
+                raise LeaseViolation(
+                    f"block {b} leased to task {self._leased_blocks[b]}"
+                )
+
+    def grant_lease(self, read_extents: Sequence[Extent],
+                    write_extents: Sequence[Extent]) -> Lease:
+        """Authorize an offloaded task; initiator loses access to the write
+        set (and will not mutate the read set) until release."""
+        with self._lock:
+            rb = frozenset(
+                b for e in read_extents for b in range(e.block, e.block + e.nblocks)
+            )
+            wb = frozenset(
+                b for e in write_extents for b in range(e.block, e.block + e.nblocks)
+            )
+            overlap = wb & set(self._leased_blocks)
+            if overlap:
+                raise LeaseViolation(f"blocks already leased: {sorted(overlap)[:4]}…")
+            tid = next(self._task_counter)
+            lease = Lease(tid, rb, wb)
+            for b in wb:
+                self._leased_blocks[b] = tid
+            self._leases[tid] = lease
+            return lease
+
+    def release_lease(self, lease: Lease) -> None:
+        with self._lock:
+            lease.done = True
+            for b in lease.write_blocks:
+                if self._leased_blocks.get(b) == lease.task_id:
+                    del self._leased_blocks[b]
+            self._leases.pop(lease.task_id, None)
+
+    # ---------------------------------------------- target-side block APIs
+    # (called by the Offload Engine on behalf of an authorized task; the
+    #  device is shared via NVMeoF so both nodes address the same blocks)
+    def authorized_read(self, lease: Lease, block: int, nblocks: int,
+                        *, node: str) -> bytes:
+        ok = lease.read_blocks | lease.write_blocks
+        for b in range(block, block + nblocks):
+            if b not in ok:
+                raise LeaseViolation(f"task {lease.task_id} read of unauthorized block {b}")
+        return self.dev.read_blocks(block, nblocks, node=node)
+
+    def authorized_write(self, lease: Lease, block: int, data: bytes,
+                         *, node: str) -> None:
+        n = (len(data) + BLOCK_SIZE - 1) // BLOCK_SIZE
+        for b in range(block, block + n):
+            if b not in lease.write_blocks:
+                raise LeaseViolation(f"task {lease.task_id} write of unauthorized block {b}")
+        self.dev.write_blocks(block, data, node=node)

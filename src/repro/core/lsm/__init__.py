@@ -1,0 +1,3 @@
+"""OffloadDB — an LSM-tree KV store on OffloadFS with offloaded MemTable
+flush (Log Recycling) and compaction (paper §IV)."""
+from repro.core.lsm.db import OffloadDB, DBConfig  # noqa: F401

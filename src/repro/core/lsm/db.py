@@ -1,0 +1,562 @@
+"""OffloadDB — RocksDB-style LSM on OffloadFS with offloaded flush +
+compaction (paper §IV).
+
+Key design points reproduced:
+  * four I/O kinds: WAL append + MANIFEST update stay on the initiator
+    (foreground); MemTable flush + compaction offload to the target.
+  * Log Recycling: a flushed MemTable ships only its sorted WAL-offset
+    array; the target rebuilds the sorted run from WAL blocks it already
+    holds — each KV pair crosses the fabric once.
+  * L0 cache: immutable MemTables stay pinned on the initiator until their
+    L0→L1 compaction commits; with Log Recycling this defers L0 SSTable
+    materialization entirely (L0 lives as WAL + offsets + the in-memory
+    table; foreground reads never touch storage for L0).
+  * MANIFEST commit is the atomic mark: a crash between output-block
+    allocation and commit loses nothing — recovery reclaims orphan blocks.
+  * initiator-side table cache (the user-level block cache): compaction on
+    the initiator pollutes it (Fig. 12/13); offloaded compaction does not.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.blockdev import BLOCK_SIZE
+from repro.core.fs import Extent, OffloadFS
+from repro.core.lsm import compaction as C
+from repro.core.lsm.manifest import Manifest
+from repro.core.lsm.memtable import TOMBSTONE, MemTable
+from repro.core.lsm.sstable import SSTableReader, TableMeta, build_bytes
+from repro.core.lsm.wal import WriteAheadLog
+from repro.core.offloader import TaskOffloader
+
+
+@dataclass
+class DBConfig:
+    memtable_bytes: int = 256 * 1024
+    l0_trigger: int = 4  # immutable memtables / L0 tables before L0→L1
+    level_ratio: int = 4
+    base_level_bytes: int = 2 * 1024 * 1024
+    sstable_target_bytes: int = 512 * 1024
+    max_level: int = 4
+    log_recycling: bool = True
+    l0_cache: bool = True
+    offload_levels: int = 99  # compactions with source level < this offload
+    offload_flush: bool = True
+    sync_wal: bool = False
+    table_cache_bytes: int = 8 * 1024 * 1024
+    cache_compaction_reads: bool = True  # False = "dio-compaction" (Fig. 12)
+    peer_target: Optional[str] = None  # offload to a peer initiator instead
+
+
+class TableCache:
+    """Initiator-side user-level block cache (whole-table granularity)."""
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity = capacity_bytes
+        self._lru: "OrderedDict[int, SSTableReader]" = OrderedDict()
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, table_id: int) -> Optional[SSTableReader]:
+        r = self._lru.get(table_id)
+        if r is not None:
+            self._lru.move_to_end(table_id)
+            self.hits += 1
+        else:
+            self.misses += 1
+        return r
+
+    def put(self, table_id: int, reader: SSTableReader):
+        self._lru[table_id] = reader
+        self._bytes += len(reader.buf)
+        while self._bytes > self.capacity and len(self._lru) > 1:
+            _, victim = self._lru.popitem(last=False)
+            self._bytes -= len(victim.buf)
+
+    def drop(self, table_id: int):
+        r = self._lru.pop(table_id, None)
+        if r is not None:
+            self._bytes -= len(r.buf)
+
+    @property
+    def hit_ratio(self):
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0
+
+
+class OffloadDB:
+    def __init__(self, fs: OffloadFS, offloader: Optional[TaskOffloader],
+                 cfg: DBConfig = DBConfig(), *, register_stubs: bool = True):
+        self.fs = fs
+        self.off = offloader
+        self.cfg = cfg
+        self.manifest = Manifest(fs)
+        self._gen = itertools.count(1)
+        self._tid = itertools.count(1)
+        self.tables: Dict[int, TableMeta] = {}
+        self.levels: Dict[int, List[int]] = {i: [] for i in range(cfg.max_level + 1)}
+        self.imm: List[dict] = []  # deferred L0: {gen, mem, wal, entry}
+        self.cache = TableCache(cfg.table_cache_bytes)
+        self._compact_ptr: Dict[int, int] = {}
+        self.stats = {"stall_events": 0, "flushes": 0, "compactions": 0,
+                      "wal_bytes": 0, "flush_rpc_payload": 0}
+        self.read_stats = {"mem": 0, "imm": 0, "l0": 0, "ln": 0, "absent": 0}
+        self._new_wal()
+        if register_stubs and offloader is not None:
+            offloader.register_local_stub("compact", C.stub_compact)
+            offloader.register_local_stub("log_recycle", C.stub_log_recycle)
+
+    # ------------------------------------------------------------ WAL mgmt
+    def _new_wal(self):
+        g = next(self._gen)
+        path = f"/wal/{g:08d}"
+        self.wal = WriteAheadLog(self.fs, path, sync=self.cfg.sync_wal)
+        self.wal_gen = g
+        self.mem = MemTable(seed=g)
+        self.manifest.append({"kind": "wal", "gen": g, "path": path})
+        self.manifest.commit()
+
+    # ------------------------------------------------------------- writes
+    def put(self, key: bytes, value: bytes) -> None:
+        off = self.wal.append(key, value)
+        self.stats["wal_bytes"] += len(key) + len(value) + 10
+        self.mem.put(key, value, off)
+        if self.mem.bytes >= self.cfg.memtable_bytes:
+            self.seal_memtable()
+
+    def delete(self, key: bytes) -> None:
+        off = self.wal.append(key, TOMBSTONE)
+        self.mem.delete(key, off)
+        if self.mem.bytes >= self.cfg.memtable_bytes:
+            self.seal_memtable()
+
+    # -------------------------------------------------------------- reads
+    def get(self, key: bytes) -> Optional[bytes]:
+        src = "absent"
+        v = self.mem.get(key)
+        if v is not None:
+            src = "mem"
+        if v is None:
+            for entry in reversed(self.imm):  # newest first (L0 cache)
+                v = entry["mem"].get(key)
+                if v is not None:
+                    src = "imm"
+                    break
+        if v is None:
+            for tid in reversed(self.levels[0]):  # newest L0 first
+                r = self._reader(tid)
+                v = r.get(key)
+                if v is not None:
+                    src = "l0"
+                    break
+        if v is None:
+            for lvl in range(1, self.cfg.max_level + 1):
+                for tid in self.levels[lvl]:
+                    m = self.tables[tid]
+                    if m.min_key <= key <= m.max_key:
+                        v = self._reader(tid).get(key)
+                        if v is not None:
+                            src = "ln"
+                            break
+                if v is not None:
+                    break
+        self.read_stats[src] += 1
+        if v is None or v == TOMBSTONE:
+            return None
+        return v
+
+    def foreground_hit_ratio(self) -> float:
+        """Initiator cache-hierarchy hit ratio for reads past the active
+        memtable: L0-cache (pinned immutable memtables) hits + table-cache
+        hits over all such lookups (the Fig. 12/13 metric)."""
+        hits = self.read_stats["imm"] + self.cache.hits
+        total = hits + self.cache.misses
+        return hits / total if total else 0.0
+
+    def scan(self, lo: bytes, n: int) -> List[Tuple[bytes, bytes]]:
+        """Range scan: n smallest keys ≥ lo across all sources."""
+        sources: List[Iterable[Tuple[bytes, bytes]]] = []
+        sources.append(((k, v) for k, v, _ in self.mem.items() if k >= lo))
+        for entry in reversed(self.imm):
+            sources.append(((k, v) for k, v, _ in entry["mem"].items() if k >= lo))
+        for tid in reversed(self.levels[0]):
+            sources.append(self._reader(tid).range_items(lo, None))
+        for lvl in range(1, self.cfg.max_level + 1):
+            its = [self._reader(t).range_items(lo, None) for t in self.levels[lvl]]
+            sources.append(itertools.chain(*its))
+        out = []
+        for k, v in C._merge(sources, drop_tombstones=True):
+            out.append((k, v))
+            if len(out) >= n:
+                break
+        return out
+
+    def _reader(self, tid: int, *, for_compaction: bool = False) -> SSTableReader:
+        use_cache = self.cfg.cache_compaction_reads or not for_compaction
+        r = self.cache.get(tid) if use_cache else None
+        if r is None:
+            m = self.tables[tid]
+            r = SSTableReader(self.fs.read(m.path))
+            if use_cache:
+                self.cache.put(tid, r)
+        return r
+
+    # ------------------------------------------------------------- flush
+    def seal_memtable(self) -> None:
+        entry = {
+            "gen": self.wal_gen,
+            "mem": self.mem,
+            "wal": self.wal,
+            "count": len(self.mem),
+        }
+        self.wal.flush()
+        mn, mx = self.mem.key_range()
+        self.manifest.append({
+            "kind": "l0log", "gen": entry["gen"], "path": self.wal.path,
+            "count": len(self.mem), "min": mn.hex(), "max": mx.hex(),
+        })
+        self.imm.append(entry)
+        self._new_wal()
+        self.stats["flushes"] += 1
+        if not (self.cfg.log_recycling and self.cfg.l0_cache):
+            self._materialize_l0(self.imm.pop(0))
+        self.maybe_compact()
+
+    def _file_runs(self, path: str) -> Tuple[List[Tuple[int, int]], int]:
+        ino = self.fs.stat(path)
+        return [(e.block, e.nblocks) for e in ino.extents], ino.size
+
+    def _alloc_outputs(self, total_bytes: int) -> List[dict]:
+        """Preallocate output files sized to the inputs (paper §IV-A)."""
+        tgt = self.cfg.sstable_target_bytes
+        # headroom: per-record index/footer overhead can exceed the input
+        # size estimate for tiny records; unused outputs are reclaimed
+        k = max(1, -(-int(total_bytes * 1.5) // tgt)) + 2
+        outs = []
+        for _ in range(k):
+            tid = next(self._tid)
+            path = f"/sst/tmp-{tid:08d}"
+            self.fs.create(path)
+            exts = self.fs.fallocate(path, tgt + BLOCK_SIZE)
+            outs.append({
+                "tid": tid, "path": path,
+                "runs": [(e.block, e.nblocks) for e in exts],
+                "cap": tgt + BLOCK_SIZE,
+                "extents": exts,
+            })
+        return outs
+
+    def _submit(self, task: str, *args, read_paths=(), write_outputs=(),
+                level: int = 0, **kw):
+        """Offload via the Task Offloader (or run locally when disabled)."""
+        read_extents = []
+        mtime = 0.0
+        for p in read_paths:
+            ino = self.fs.stat(p)
+            read_extents.extend(ino.extents)
+            mtime = max(mtime, ino.mtime)
+        write_extents = [e for o in write_outputs for e in o["extents"]]
+        target = self.cfg.peer_target
+        offload_ok = self.off is not None and (
+            (task == "compact" and level < self.cfg.offload_levels)
+            or (task == "log_recycle" and self.cfg.offload_flush)
+        )
+        if offload_ok:
+            result, where = self.off.submit(
+                task, *args,
+                read_extents=read_extents, write_extents=write_extents,
+                target=target, mtime=mtime,
+                bypass_cache=False, **kw,
+            )
+            return result, where
+        # run on the initiator (Local mode / rejected)
+        lease = self.fs.grant_lease(read_extents, write_extents)
+        try:
+            from repro.core.engine import OffloadEngine
+
+            eng = OffloadEngine(self.fs, node=self.fs.node, enable_cache=False)
+            eng.register_stub("compact", C.stub_compact)
+            eng.register_stub("log_recycle", C.stub_log_recycle)
+            res = eng.run_task(task, lease, *args, mtime=mtime, bypass_cache=True, **kw)
+            # initiator-side compaction I/O pollutes the table cache
+            if self.cfg.cache_compaction_reads and task == "compact":
+                for tid in list(self.cache._lru):
+                    self.cache.get(tid)  # touch: models pollution pressure
+            return res, self.fs.node
+        finally:
+            self.fs.release_lease(lease)
+
+    def _commit_outputs(self, outs, results, level_to: int) -> List[int]:
+        new_ids = []
+        used_idx = {r["idx"] for r in results}
+        for r in results:
+            o = outs[r["idx"]]
+            path = f"/sst/{level_to}/{o['tid']:08d}"
+            self.fs.rename(o["path"], path)
+            self.fs.truncate(path, r["used"])  # reclaim unused tail blocks
+            meta = TableMeta(
+                o["tid"], path, level_to, r["n"], r["used"],
+                bytes(r["min"]), bytes(r["max"]),
+            )
+            self.tables[o["tid"]] = meta
+            new_ids.append(o["tid"])
+            self.manifest.append({
+                "kind": "add", "level": level_to, "table_id": o["tid"],
+                "path": path, "n": r["n"], "size": r["used"],
+                "min": meta.min_key.hex(), "max": meta.max_key.hex(),
+            })
+        for i, o in enumerate(outs):
+            if i not in used_idx:
+                self.fs.delete(o["path"])  # unused prealloc → back to allocator
+        return new_ids
+
+    def _pollute_after_local(self, where: str, new_ids) -> None:
+        """Cache pollution (paper §II-E2): compaction executed ON the
+        initiator drags its output (and victim) blocks through the
+        initiator's cache — exactly what offloading avoids. dio-compaction
+        (cache_compaction_reads=False) bypasses."""
+        if where == self.fs.node and self.cfg.cache_compaction_reads:
+            for t in new_ids:
+                self._reader(t)
+
+    def _materialize_l0(self, entry) -> None:
+        """Flush one immutable memtable to a physical L0 SSTable."""
+        mem: MemTable = entry["mem"]
+        total = mem.bytes + 24 * len(mem) + 4096
+        outs = self._alloc_outputs(total)
+        if self.cfg.log_recycling:
+            runs, size = self._file_runs(entry["wal"].path)
+            wal_arg = {"runs": runs, "size": size, "offsets": mem.sorted_offsets()}
+            self.stats["flush_rpc_payload"] += 8 * len(mem)  # offsets only
+            results, _ = self._submit(
+                "log_recycle", wal_arg,
+                [{"runs": o["runs"], "cap": o["cap"]} for o in outs],
+                read_paths=[entry["wal"].path], write_outputs=outs,
+            )
+        else:
+            # vanilla path: the initiator serializes and writes the table
+            # itself (each KV pair crosses the fabric a second time)
+            data = build_bytes([(k, v) for k, v, _ in mem.items()])
+            self.stats["flush_rpc_payload"] += len(data)
+            o = outs[0]
+            self.fs.write(o["path"], data, 0)
+            results = [{"idx": 0, "used": len(data), "n": len(mem),
+                        "min": next(mem.items())[0], "max": mem.key_range()[1]}]
+        new_ids = self._commit_outputs(outs, results, 0)
+        self.levels[0].extend(new_ids)  # newest last
+        if not self.cfg.log_recycling:
+            self._pollute_after_local(self.fs.node, new_ids)
+        self.manifest.append({"kind": "droplog", "gen": entry["gen"]})
+        self.manifest.commit()
+        self.fs.delete(entry["wal"].path)
+
+    # --------------------------------------------------------- compaction
+    def level_bytes(self, lvl: int) -> int:
+        return sum(self.tables[t].size for t in self.levels[lvl])
+
+    def _level_limit(self, lvl: int) -> int:
+        return self.cfg.base_level_bytes * (self.cfg.level_ratio ** (lvl - 1))
+
+    def maybe_compact(self) -> None:
+        guard = 0
+        while guard < 8:
+            guard += 1
+            if len(self.imm) + len(self.levels[0]) >= self.cfg.l0_trigger:
+                self.compact_l0()
+                continue
+            done = True
+            for lvl in range(1, self.cfg.max_level):
+                if self.level_bytes(lvl) > self._level_limit(lvl):
+                    self.compact_level(lvl)
+                    done = False
+                    break
+            if done:
+                break
+
+    def compact_l0(self) -> None:
+        """L0 (+ deferred WAL runs) + overlapping L1 → new L1 tables."""
+        imm = list(self.imm)  # newest last; send newest first
+        l0_ids = list(self.levels[0])
+        lo, hi = None, None
+        for e in imm:
+            mn, mx = e["mem"].key_range()
+            lo = mn if lo is None or mn < lo else lo
+            hi = mx if hi is None or mx > hi else hi
+        for t in l0_ids:
+            m = self.tables[t]
+            lo = m.min_key if lo is None or m.min_key < lo else lo
+            hi = m.max_key if hi is None or m.max_key > hi else hi
+        if lo is None:
+            return
+        l1_ids = [t for t in self.levels[1]
+                  if not (self.tables[t].max_key < lo or self.tables[t].min_key > hi)]
+        recycle = []
+        read_paths = []
+        for e in reversed(imm):  # newest first
+            runs, size = self._file_runs(e["wal"].path)
+            recycle.append({"runs": runs, "size": size,
+                            "offsets": e["mem"].sorted_offsets()})
+            read_paths.append(e["wal"].path)
+        inputs = []
+        for t in reversed(l0_ids):  # newer L0 first
+            runs, size = self._file_runs(self.tables[t].path)
+            inputs.append({"runs": runs, "size": size})
+            read_paths.append(self.tables[t].path)
+        for t in l1_ids:  # level-1 oldest
+            runs, size = self._file_runs(self.tables[t].path)
+            inputs.append({"runs": runs, "size": size})
+            read_paths.append(self.tables[t].path)
+        total = sum(i["size"] for i in inputs) + sum(r["size"] for r in recycle) + 4096
+        outs = self._alloc_outputs(total)
+        drop = (self.cfg.max_level == 1)
+        results, where = self._submit(
+            "compact", inputs, recycle,
+            [{"runs": o["runs"], "cap": o["cap"]} for o in outs],
+            drop, read_paths=read_paths, write_outputs=outs, level=0,
+        )
+        new_ids = self._commit_outputs(outs, results, 1)
+        self._pollute_after_local(where, new_ids)
+        # drop victims: manifest first (commit mark), then reclaim
+        for e in imm:
+            self.manifest.append({"kind": "droplog", "gen": e["gen"]})
+        for t in l0_ids + l1_ids:
+            self.manifest.append({"kind": "drop", "table_id": t})
+        self.levels[1] = sorted(
+            [t for t in self.levels[1] if t not in l1_ids] + new_ids,
+            key=lambda t: self.tables[t].min_key,
+        )
+        self.levels[0] = []
+        self.manifest.commit()
+        for e in imm:
+            self.fs.delete(e["wal"].path)
+        for t in l0_ids + l1_ids:
+            self.cache.drop(t)
+            self.fs.delete(self.tables.pop(t).path)
+        self.imm = []
+        self.stats["compactions"] += 1
+
+    def compact_level(self, lvl: int) -> None:
+        """One table from lvl + overlapping lvl+1 → lvl+1."""
+        ids = self.levels[lvl]
+        if not ids:
+            return
+        ptr = self._compact_ptr.get(lvl, 0) % len(ids)
+        vid = ids[ptr]
+        self._compact_ptr[lvl] = ptr + 1
+        vm = self.tables[vid]
+        nxt = [t for t in self.levels[lvl + 1]
+               if not (self.tables[t].max_key < vm.min_key
+                       or self.tables[t].min_key > vm.max_key)]
+        inputs, read_paths = [], []
+        for t in [vid] + nxt:
+            runs, size = self._file_runs(self.tables[t].path)
+            inputs.append({"runs": runs, "size": size})
+            read_paths.append(self.tables[t].path)
+        total = sum(i["size"] for i in inputs) + 4096
+        outs = self._alloc_outputs(total)
+        drop = lvl + 1 >= self.cfg.max_level
+        results, where = self._submit(
+            "compact", inputs, [],
+            [{"runs": o["runs"], "cap": o["cap"]} for o in outs],
+            drop, read_paths=read_paths, write_outputs=outs, level=lvl,
+        )
+        new_ids = self._commit_outputs(outs, results, lvl + 1)
+        self._pollute_after_local(where, new_ids)
+        for t in [vid] + nxt:
+            self.manifest.append({"kind": "drop", "table_id": t})
+        self.levels[lvl] = [t for t in ids if t != vid]
+        self.levels[lvl + 1] = sorted(
+            [t for t in self.levels[lvl + 1] if t not in nxt] + new_ids,
+            key=lambda t: self.tables[t].min_key,
+        )
+        self.manifest.commit()
+        for t in [vid] + nxt:
+            self.cache.drop(t)
+            self.fs.delete(self.tables.pop(t).path)
+        self.stats["compactions"] += 1
+
+    # ------------------------------------------------------------ recovery
+    def flush_all(self) -> None:
+        if len(self.mem):
+            self.seal_memtable()
+        while self.imm:
+            self._materialize_l0(self.imm.pop(0))
+        self.manifest.commit()
+
+    @classmethod
+    def recover(cls, fs: OffloadFS, offloader=None, cfg: DBConfig = DBConfig()):
+        """Rebuild from MANIFEST + WAL replay after a crash/restart."""
+        db = cls.__new__(cls)
+        db.fs = fs
+        db.off = offloader
+        db.cfg = cfg
+        db.manifest = Manifest(fs)
+        db.tables = {}
+        db.levels = {i: [] for i in range(cfg.max_level + 1)}
+        db.imm = []
+        db.cache = TableCache(cfg.table_cache_bytes)
+        db._compact_ptr = {}
+        db.stats = {"stall_events": 0, "flushes": 0, "compactions": 0,
+                    "wal_bytes": 0, "flush_rpc_payload": 0}
+        db.read_stats = {"mem": 0, "imm": 0, "l0": 0, "ln": 0, "absent": 0}
+        live_logs: Dict[int, str] = {}
+        active_gen, active_path = 0, None
+        max_tid = 0
+        for rec in db.manifest.replay():
+            k = rec["kind"]
+            if k == "add":
+                m = TableMeta(rec["table_id"], rec["path"], rec["level"],
+                              rec["n"], rec["size"],
+                              bytes.fromhex(rec["min"]), bytes.fromhex(rec["max"]))
+                db.tables[m.table_id] = m
+                db.levels[m.level].append(m.table_id)
+                max_tid = max(max_tid, m.table_id)
+            elif k == "drop":
+                t = rec["table_id"]
+                if t in db.tables:
+                    db.levels[db.tables[t].level].remove(t)
+                    del db.tables[t]
+            elif k == "l0log":
+                live_logs[rec["gen"]] = rec["path"]
+            elif k == "droplog":
+                live_logs.pop(rec["gen"], None)
+            elif k == "wal":
+                active_gen, active_path = rec["gen"], rec["path"]
+        for lvl in range(1, cfg.max_level + 1):
+            db.levels[lvl].sort(key=lambda t: db.tables[t].min_key)
+        db._tid = itertools.count(max_tid + 1)
+        db._gen = itertools.count(active_gen + 1)
+        # orphan reclamation: tmp files never committed
+        for path in fs.listdir("/sst/tmp-"):
+            fs.delete(path)
+        # rebuild deferred L0s from their WALs (oldest first)
+        for gen in sorted(live_logs):
+            path = live_logs[gen]
+            if not fs.exists(path):
+                continue
+            wal = WriteAheadLog(fs, path)
+            ino = fs.stat(path)
+            wal._size = wal._flushed = ino.size
+            mem = MemTable(seed=gen)
+            for key, val, off in wal.replay():
+                mem.put(key, val, off)
+            db.imm.append({"gen": gen, "mem": mem, "wal": wal, "count": len(mem)})
+        # active WAL → live memtable
+        if active_path and fs.exists(active_path):
+            db.wal = WriteAheadLog(fs, active_path, sync=cfg.sync_wal)
+            ino = fs.stat(active_path)
+            db.wal._size = db.wal._flushed = ino.size
+            db.wal_gen = active_gen
+            db.mem = MemTable(seed=active_gen)
+            for key, val, off in db.wal.replay():
+                db.mem.put(key, val, off)
+        else:
+            db._new_wal()
+        if db.off is not None:
+            db.off.register_local_stub("compact", C.stub_compact)
+            db.off.register_local_stub("log_recycle", C.stub_log_recycle)
+        return db

@@ -1,0 +1,121 @@
+"""Task Offloader — initiator-side (paper §III).
+
+Submits I/O-intensive tasks to the storage node (near-data processing) or a
+peer initiator with the volume mounted (§III-C), subject to the target's
+admission policy. Rejected tasks run immediately on the initiator itself
+(the paper's fallback). All remote calls carry only block addresses and
+small metadata — never file contents (that's the point).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.engine import EngineIO, OffloadEngine
+from repro.core.fs import Extent, Lease, OffloadFS
+from repro.core.rpc import RpcFabric
+
+
+@dataclass
+class OffloadStats:
+    submitted: int = 0
+    offloaded: int = 0
+    rejected: int = 0
+    ran_local: int = 0
+    by_target: Dict[str, int] = field(default_factory=dict)
+
+
+class TaskOffloader:
+    """One per initiator node. Targets = {"storage": engine} ∪ peers."""
+
+    def __init__(self, fs: OffloadFS, fabric: RpcFabric, *, node: str,
+                 storage_node: str = "storage0"):
+        self.fs = fs
+        self.fabric = fabric
+        self.node = node
+        self.storage_node = storage_node
+        self._local_engine = OffloadEngine(fs, node=node, enable_cache=False)
+        self.stats = OffloadStats()
+        self._lock = threading.Lock()
+
+    def register_local_stub(self, name: str, fn: Callable) -> None:
+        """Register the task implementation for local (rejected) execution."""
+        self._local_engine.register_stub(name, fn)
+
+    def submit(
+        self,
+        task: str,
+        *args,
+        read_extents: Sequence[Extent] = (),
+        write_extents: Sequence[Extent] = (),
+        target: Optional[str] = None,
+        mtime: float = 0.0,
+        bypass_cache: bool = False,
+        **kwargs,
+    ):
+        """Offload `task` to `target` (default: the storage node). Returns
+        (result, where_ran). The initiator quiesces on the leased write set
+        for the duration (no DLM — lease discipline instead)."""
+        dst = target or self.storage_node
+        lease = self.fs.grant_lease(read_extents, write_extents)
+        with self._lock:
+            self.stats.submitted += 1
+        try:
+            admitted = self.fabric.call(self.node, dst, "admit", self.node)
+            if admitted:
+                result = self.fabric.call(
+                    self.node, dst, "run_task", task,
+                    {
+                        "task_id": lease.task_id,
+                        "read_blocks": sorted(lease.read_blocks),
+                        "write_blocks": sorted(lease.write_blocks),
+                    },
+                    args, kwargs, mtime, bypass_cache,
+                )
+                self.fabric.call(self.node, dst, "complete", self.node)
+                with self._lock:
+                    self.stats.offloaded += 1
+                    self.stats.by_target[dst] = self.stats.by_target.get(dst, 0) + 1
+                return result, dst
+            # rejected → run locally on the initiator
+            with self._lock:
+                self.stats.rejected += 1
+                self.stats.ran_local += 1
+            result = self._local_engine.run_task(
+                task, lease, *args, mtime=mtime, bypass_cache=True, **kwargs
+            )
+            return result, self.node
+        finally:
+            self.fs.release_lease(lease)
+
+
+def serve_engine(engine: OffloadEngine, fabric: RpcFabric, policy,
+                 *, node: Optional[str] = None) -> None:
+    """Wire an Offload Engine (storage node or peer) into the RPC fabric.
+
+    The lease is reconstructed from the wire payload (block sets), keeping
+    the fabric honest: the target never sees initiator object references.
+    """
+    n = node or engine.node
+
+    def admit(initiator: str) -> bool:
+        policy.register(initiator)
+        return policy.admit(initiator)
+
+    def complete(initiator: str) -> None:
+        policy.complete(initiator)
+
+    def run_task(task, lease_wire, args, kwargs, mtime, bypass_cache):
+        lease = Lease(
+            lease_wire["task_id"],
+            frozenset(lease_wire["read_blocks"]),
+            frozenset(lease_wire["write_blocks"]),
+        )
+        return engine.run_task(
+            task, lease, *args, mtime=mtime, bypass_cache=bypass_cache, **kwargs
+        )
+
+    fabric.register(n, "admit", admit)
+    fabric.register(n, "complete", complete)
+    fabric.register(n, "run_task", run_task)

@@ -1,0 +1,69 @@
+"""In-process RPC plane modeling the paper's gRPC stub/skeleton split.
+
+Messages are really serialized (pickle) so byte counts are honest; every
+call is recorded (src, dst, method, req_bytes, resp_bytes) — the DES
+network model replays these. Handlers are registered per node; a call is
+dispatched synchronously (deterministic) but the fabric is thread-safe so
+concurrency tests can drive multiple initiators from threads.
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Tuple
+
+
+@dataclass
+class RpcRecord:
+    src: str
+    dst: str
+    method: str
+    req_bytes: int
+    resp_bytes: int
+
+
+class RpcError(Exception):
+    pass
+
+
+class RpcFabric:
+    """Registry of node endpoints + synchronous transport with accounting."""
+
+    def __init__(self):
+        self._handlers: Dict[Tuple[str, str], Callable] = {}
+        self._lock = threading.Lock()
+        self.records: List[RpcRecord] = []
+        self.bytes_by_link: Dict[Tuple[str, str], int] = {}
+
+    def register(self, node: str, method: str, fn: Callable) -> None:
+        with self._lock:
+            self._handlers[(node, method)] = fn
+
+    def call(self, src: str, dst: str, method: str, *args, **kwargs) -> Any:
+        req = pickle.dumps((args, kwargs))
+        with self._lock:
+            fn = self._handlers.get((dst, method))
+        if fn is None:
+            raise RpcError(f"no handler {method!r} on node {dst!r}")
+        a, kw = pickle.loads(req)  # honest copy across the "wire"
+        result = fn(*a, **kw)
+        resp = pickle.dumps(result)
+        rec = RpcRecord(src, dst, method, len(req), len(resp))
+        with self._lock:
+            self.records.append(rec)
+            key = (src, dst)
+            self.bytes_by_link[key] = (
+                self.bytes_by_link.get(key, 0) + rec.req_bytes + rec.resp_bytes
+            )
+        return pickle.loads(resp)
+
+    # ------------------------------------------------------------- stats
+    def total_bytes(self) -> int:
+        with self._lock:
+            return sum(self.bytes_by_link.values())
+
+    def reset(self):
+        with self._lock:
+            self.records.clear()
+            self.bytes_by_link.clear()

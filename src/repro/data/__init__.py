@@ -1,0 +1,7 @@
+from repro.data.preprocess import (  # noqa: F401
+    decode_image,
+    preprocess_image,
+    random_crop_params,
+)
+from repro.data.offload_prep import OffloadPrep  # noqa: F401
+from repro.data.pipeline import TokenPipeline  # noqa: F401

@@ -1,0 +1,108 @@
+"""OffloadPrep (paper §V): offload minibatch image preprocessing to the
+storage node and/or peer initiators through OffloadFS — no scheduler, just
+the FS's admission control. The dataset lives as image files on the
+disaggregated volume; the initiator partitions each minibatch into a local
+share and offloaded shares; the offloaded stub reads image blocks on the
+target (near-data), preprocesses there, and returns only the (small)
+normalized tensors.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.fs import OffloadFS
+from repro.core.offloader import TaskOffloader
+from repro.data.preprocess import encode_image, preprocess_image, synthetic_image
+
+
+def stub_preprocess(io, images: List[dict], out_size: int) -> List[np.ndarray]:
+    """Target-side stub: images = [{"runs", "size", "seed"}]."""
+    out = []
+    for im in images:
+        buf = b"".join(io.offload_read(b, n) for b, n in im["runs"])[: im["size"]]
+        out.append(preprocess_image(buf, im["seed"], out_size))
+    return out
+
+
+class OffloadPrep:
+    def __init__(self, fs: OffloadFS, offloader: Optional[TaskOffloader],
+                 *, out_size: int = 224, offload_ratio: float = 1 / 3,
+                 targets: Sequence[str] = ("storage0",)):
+        self.fs = fs
+        self.off = offloader
+        self.out_size = out_size
+        self.offload_ratio = offload_ratio
+        self.targets = list(targets)
+        if offloader is not None:
+            offloader.register_local_stub("preprocess", stub_preprocess)
+        self.stats = {"local": 0, "offloaded": 0, "rejected": 0}
+
+    # ------------------------------------------------------------ dataset
+    def materialize_corpus(self, n_images: int, prefix: str = "/img",
+                           seed: int = 0, max_side: int = 512) -> List[str]:
+        paths = []
+        for i in range(n_images):
+            img = synthetic_image(seed * 100003 + i, max_side=max_side)
+            p = f"{prefix}/{i:08d}.raw"
+            self.fs.create(p)
+            self.fs.write(p, encode_image(img), 0)
+            paths.append(p)
+        return paths
+
+    # ---------------------------------------------------------- minibatch
+    def _image_arg(self, path: str, seed: int) -> Tuple[dict, list]:
+        ino = self.fs.stat(path)
+        return (
+            {
+                "runs": [(e.block, e.nblocks) for e in ino.extents],
+                "size": ino.size,
+                "seed": seed,
+            },
+            ino.extents,
+        )
+
+    def preprocess_minibatch(self, paths: Sequence[str], *, epoch_seed: int = 0
+                             ) -> np.ndarray:
+        """Split the minibatch: offload_ratio × len(paths) images per remote
+        target, the rest locally. Returns (N, out, out, 3) f32."""
+        n = len(paths)
+        per_target = int(n * self.offload_ratio)
+        shares: List[Tuple[Optional[str], List[int]]] = []
+        idx = 0
+        if self.off is not None and per_target > 0:
+            for t in self.targets:
+                shares.append((t, list(range(idx, min(idx + per_target, n)))))
+                idx += per_target
+        shares.append((None, list(range(idx, n))))  # local share
+
+        out: List[Optional[np.ndarray]] = [None] * n
+        for target, ids in shares:
+            if not ids:
+                continue
+            args, extents = [], []
+            for i in ids:
+                a, e = self._image_arg(paths[i], epoch_seed * 1000003 + i)
+                args.append(a)
+                extents.extend(e)
+            if target is None:
+                for a, i in zip(args, ids):
+                    buf = self.fs.read(paths[i])
+                    out[i] = preprocess_image(buf, a["seed"], self.out_size)
+                self.stats["local"] += len(ids)
+            else:
+                tensors, where = self.off.submit(
+                    "preprocess", args, self.out_size,
+                    read_extents=extents, write_extents=[],
+                    target=target,
+                    mtime=max(self.fs.stat(paths[i]).mtime for i in ids),
+                )
+                if where == self.off.node:
+                    self.stats["rejected"] += len(ids)
+                    self.stats["local"] += len(ids)
+                else:
+                    self.stats["offloaded"] += len(ids)
+                for i, t in zip(ids, tensors):
+                    out[i] = t
+        return np.stack(out)  # type: ignore[arg-type]

@@ -1,0 +1,109 @@
+"""Pallas TPU flash-attention forward (GQA, causal, online softmax).
+
+Tiling: grid = (B·KV·G, Sq/bq, Sk/bkv) — the KV-block axis is innermost
+(TPU grids run sequentially over the last axis), with the running max /
+denominator / accumulator carried in VMEM scratch across KV steps (FA2).
+K/V BlockSpec index maps share one KV head across its G query heads — the
+GQA layout never reshapes a sharded heads dim. Block shapes are MXU-aligned
+(bq, bkv multiples of 128 in production; head_dim is the lane dim).
+
+Causal block skipping: fully-masked (q-block, kv-block) tiles skip the
+matmul entirely — ~2× fewer MXU flops at long seq.
+
+VMEM budget per step: q (bq·D) + k,v (2·bkv·D) + s/p (bq·bkv) + acc (bq·D)
+f32 ≈ 1.3 MiB at bq=bkv=256, D=128 — well inside the ~16 MiB/core VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               sm_scale, causal, block_q, block_kv, nk, softcap):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+    # causal skip: block fully above the diagonal contributes nothing
+    run = (not causal) or (q_start + block_q - 1 >= k_start)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0].astype(jnp.float32)  # (bkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # (bq, bkv)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, sm_scale=None, softcap=0.0,
+                    block_q=256, block_kv=256, interpret=False):
+    """q (BH, Sq, D) with BH = B·KV·G (h = kv·G + g); k/v (BKV, Sk, D) with
+    BKV = B·KV. Returns (BH, Sq, D)."""
+    BH, Sq, D = q.shape
+    BKV, Sk, _ = k.shape
+    G = BH // BKV
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Sk)
+    assert Sq % block_q == 0 and Sk % block_kv == 0
+    nq = Sq // block_q
+    nk = Sk // block_kv
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _fa_kernel, sm_scale=sm_scale, causal=causal, block_q=block_q,
+        block_kv=block_kv, nk=nk, softcap=softcap,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda h, qi, ki: (h // G, ki, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda h, qi, ki: (h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,65 @@
+"""Pallas TPU bitonic merge of two sorted (key, payload) runs — the
+compaction hot-spot of OffloadDB, TPU-adapted (DESIGN.md §3).
+
+RocksDB merge-sorts with scalar, branchy CPU code. TPUs have no
+data-dependent control flow in the vector unit, so the paper's merge is
+reformulated as a **bitonic merge network**: concat(a, reverse(b)) is a
+bitonic sequence; log2(2n) compare-exchange stages of fixed geometry sort
+it — entirely branch-free min/max over (8,128)-aligned vectors (VPU), with
+payloads moved by the same comparators (select on the key comparison).
+
+One kernel invocation merges a VMEM-resident pair of runs (n ≤ 64 Ki keys
+per side at i32 key + i32 payload ≈ 1 MiB); `ops.merge_sorted` tiles longer
+runs through the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitonic_merge_kernel(ak_ref, av_ref, bk_ref, bv_ref, ok_ref, ov_ref, *,
+                          n: int):
+    ak = ak_ref[...]
+    av = av_ref[...]
+    bk = bk_ref[...]
+    bv = bv_ref[...]
+    keys = jnp.concatenate([ak, bk[::-1]], axis=0)  # bitonic (2n,)
+    vals = jnp.concatenate([av, bv[::-1]], axis=0)
+    m = 2 * n
+    d = n
+    while d >= 1:
+        kk = keys.reshape(m // (2 * d), 2, d)
+        vv = vals.reshape(m // (2 * d), 2, d)
+        lo_k, hi_k = kk[:, 0], kk[:, 1]
+        lo_v, hi_v = vv[:, 0], vv[:, 1]
+        cond = lo_k <= hi_k
+        nlo_k = jnp.where(cond, lo_k, hi_k)
+        nhi_k = jnp.where(cond, hi_k, lo_k)
+        nlo_v = jnp.where(cond, lo_v, hi_v)
+        nhi_v = jnp.where(cond, hi_v, lo_v)
+        keys = jnp.stack([nlo_k, nhi_k], axis=1).reshape(m)
+        vals = jnp.stack([nlo_v, nhi_v], axis=1).reshape(m)
+        d //= 2
+    ok_ref[...] = keys
+    ov_ref[...] = vals
+
+
+def bitonic_merge(a_keys, a_vals, b_keys, b_vals, *, interpret=False):
+    """Merge two sorted runs of equal power-of-two length n. Keys i32/u32/
+    f32; payloads any 32-bit dtype. Returns (keys (2n,), vals (2n,))."""
+    (n,) = a_keys.shape
+    assert n & (n - 1) == 0, "power-of-two run length"
+    assert b_keys.shape == (n,)
+    kernel = functools.partial(_bitonic_merge_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((2 * n,), a_keys.dtype),
+            jax.ShapeDtypeStruct((2 * n,), a_vals.dtype),
+        ),
+        interpret=interpret,
+    )(a_keys, a_vals, b_keys, b_vals)

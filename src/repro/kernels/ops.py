@@ -1,0 +1,56 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body in Python) — the TPU target uses the same
+BlockSpecs natively. ``INTERPRET`` flips automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import kvmerge as _kv
+from repro.kernels import preprocess as _pp
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "softcap", "block_q", "block_kv"))
+def flash_attention(q, k, v, *, causal=True, softcap=0.0, block_q=256, block_kv=256):
+    """GQA flash attention. q (B,S,KV,G,D), k/v (B,S,KV,D) — the model's
+    native layout; flattened to kernel layout internally."""
+    B, Sq, KV, G, D = q.shape
+    Sk = k.shape[1]
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * KV * G, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, D)
+    o = _fa.flash_attention(
+        qf, kf, vf, causal=causal, softcap=softcap,
+        block_q=min(block_q, Sq), block_kv=min(block_kv, Sk),
+        interpret=INTERPRET,
+    )
+    return o.reshape(B, KV, G, Sq, D).transpose(0, 3, 1, 2, 4)
+
+
+@jax.jit
+def merge_sorted(a_keys, a_vals, b_keys, b_vals):
+    """Merge two sorted runs (equal power-of-two length)."""
+    return _kv.bitonic_merge(a_keys, a_vals, b_keys, b_vals, interpret=INTERPRET)
+
+
+def preprocess_image(img_chw, *, out_size=224, flip=False, mean=None, std=None):
+    """Fused resize(+flip)+normalize. img (C,H,W) f32 → (C,out,out) f32."""
+    C, H, W = img_chw.shape
+    ry = jnp.asarray(_pp.resize_operator(H, out_size))
+    rxt = jnp.asarray(_pp.resize_operator(W, out_size, flip=flip).T)
+    if mean is None:
+        mean = np.array([0.485, 0.456, 0.406], np.float32) * 255.0
+    if std is None:
+        std = np.array([0.229, 0.224, 0.225], np.float32) * 255.0
+    mean = jnp.asarray(mean, jnp.float32).reshape(C, 1)
+    std = jnp.asarray(std, jnp.float32).reshape(C, 1)
+    return _pp.preprocess_plane(img_chw, ry, rxt, mean, std, interpret=INTERPRET)

@@ -1,0 +1,41 @@
+"""Pure-jnp/numpy oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, sm_scale=None, softcap=0.0):
+    """q (BH,Sq,D), k/v (BKV,Sk,D), BH = BKV·G."""
+    BH, Sq, D = q.shape
+    BKV, Sk, _ = k.shape
+    G = BH // BKV
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(D)
+    kf = jnp.repeat(k, G, axis=0).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=0).astype(jnp.float32)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), kf) * sm_scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, vf).astype(q.dtype)
+
+
+def bitonic_merge_ref(ak, av, bk, bv):
+    """Stable-ish merge oracle: numpy mergesort over concatenated runs."""
+    keys = np.concatenate([np.asarray(ak), np.asarray(bk)])
+    vals = np.concatenate([np.asarray(av), np.asarray(bv)])
+    order = np.argsort(keys, kind="stable")
+    return keys[order], vals[order]
+
+
+def preprocess_plane_ref(img, ry, rxt, mean, std):
+    """out = (Ry · img · Rxᵀ - mean)/std per channel (f64-free jnp)."""
+    t = jnp.einsum("oh,chw->cow", jnp.asarray(ry), jnp.asarray(img))
+    t = jnp.einsum("cow,wq->coq", t, jnp.asarray(rxt))
+    return (t - mean[:, :, None]) / std[:, :, None]

@@ -1,0 +1,126 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init). Placeholder host devices are used ONLY here —
+# tests/benches see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against the production meshes and record memory / cost /
+collective analysis. Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch glm4-9b]
+        [--cell train_4k] [--multi-pod | --single-pod | --both]
+        [--out EXPERIMENTS_dryrun.csv] [--hlo-dir dir]
+
+Every cell must compile — a sharding mismatch, compile-time OOM or
+unsupported collective here is a bug in the framework.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, hlo_dir=None,
+             perf: bool = False):
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import CellSkip, plan_cell
+    from repro import roofline as R
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        plan = plan_cell(arch, cell_name, mesh, perf=perf)
+    except CellSkip as e:
+        return {"arch": arch, "cell": cell_name, "mesh": mesh_name,
+                "status": "SKIP", "reason": str(e)}
+    lowered = plan.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    rl = R.analyze(plan, compiled, mesh_name)
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        with open(os.path.join(hlo_dir, f"{arch}_{cell_name}_{mesh_name}.hlo"), "w") as f:
+            f.write(compiled.as_text())
+    return {
+        "arch": arch, "cell": cell_name, "mesh": mesh_name, "status": "OK",
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "arg_bytes": int(ma.argument_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "out_bytes": int(ma.output_size_in_bytes),
+        "mem_per_dev_GiB": round(rl.memory_per_device / 2**30, 3),
+        "flops_analytic": rl.flops,
+        "flops_hlo_raw": rl.raw_cost.get("flops"),
+        "bytes_analytic": rl.hbm_bytes,
+        "bytes_hlo_raw": rl.raw_cost.get("bytes accessed"),
+        "coll_bytes_per_dev": rl.coll_bytes,
+        "coll_breakdown": rl.coll_breakdown,
+        "t_compute_ms": rl.t_compute * 1e3,
+        "t_memory_ms": rl.t_memory * 1e3,
+        "t_collective_ms": rl.t_collective * 1e3,
+        "bottleneck": rl.bottleneck,
+        "model_flops": rl.model_flops,
+        "useful_ratio": rl.useful_ratio,
+        "notes": rl.notes,
+    }
+
+
+def main(argv=None):
+    from repro.launch.specs import ALL_ARCHS
+    from repro.models.config import SHAPE_CELLS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--cell", default=None, help="one cell (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--both", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSONL results here")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--perf", action="store_true",
+                    help="apply §Perf hillclimb variants (EXPERIMENTS.md)")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else ALL_ARCHS
+    cells = [args.cell] if args.cell else list(SHAPE_CELLS)
+    meshes = [False, True] if (args.both or not (args.multi_pod or args.single_pod)) \
+        else ([True] if args.multi_pod else [False])
+
+    out = open(args.out, "a") if args.out else None
+    failures = 0
+    for mp in meshes:
+        for arch in archs:
+            for cell in cells:
+                try:
+                    res = run_cell(arch, cell, mp, hlo_dir=args.hlo_dir,
+                                   perf=args.perf)
+                except Exception as e:  # noqa: BLE001
+                    res = {"arch": arch, "cell": cell,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures += 1
+                line = json.dumps(res)
+                print(line[:400] if res.get("status") == "OK" else line, flush=True)
+                if out:
+                    out.write(line + "\n")
+                    out.flush()
+    if out:
+        out.close()
+    print(f"done; failures={failures}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Production meshes. v5e pod = 16×16 (256 chips); multi-pod adds a leading
+"pod" axis (2×16×16 = 512 chips).
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (roofline terms; see EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices=None):
+    """1×N mesh over whatever devices exist (tests / examples)."""
+    import numpy as np
+
+    devs = devices if devices is not None else jax.devices()
+    n = len(devs)
+    return jax.sharding.Mesh(np.array(devs).reshape(1, n), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    import math
+
+    return math.prod(mesh.shape.values())

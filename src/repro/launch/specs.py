@@ -1,0 +1,334 @@
+"""Per-cell plans: abstract inputs (ShapeDtypeStruct — never allocated),
+sharding rules, in/out shardings and the step function for every
+(architecture × shape-cell × mesh) combination.
+
+Cell semantics (assignment):
+  * train_4k     — train_step (fwd+bwd+optimizer), global batch 256 × 4096
+  * prefill_32k  — serve prefill: build the KV/state cache for 32 × 32768
+  * decode_32k   — serve_step: one token against a 32768-entry cache, B=128
+  * long_500k    — decode at 524288 context, B=1 (sub-quadratic archs only)
+
+Sharding strategies (see DESIGN.md §5):
+  * train: batch→(pod,data); tensor axes→model; ZeRO-1 opt state; per-arch
+    microbatching; the ≥300B archs additionally FSDP params over data
+    ("embed"→data) and sequence-shard the residual stream ("act_seq"→model).
+  * decode: weights 2-axis sharded ("embed"→data on top of model-axis rules);
+    KV cache sharded batch→dp + kv_seq→model (B=1 long-context: kv_seq over
+    (data, model) — 256-way flash-decode layout).
+  * prefill: decode weight rules + bf16 params; activations seq-sharded for
+    attention-only archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import SHAPE_CELLS, ModelConfig, ShapeCell, get_config
+from repro.models.model import Model, build_model
+from repro.models.transformer import n_periods, period_layout
+from repro.sharding import ShardingRules, make_rules, use_rules
+from repro.train import optim
+from repro.train.step import make_train_step
+from repro.serve.step import make_decode_step, make_prefill_step
+
+# per-arch gradient-accumulation microbatches for train_4k (memory fits; see
+# EXPERIMENTS.md §Dry-run)
+TRAIN_MICROBATCHES = {
+    "glm4-9b": 4,
+    "granite-3-8b": 4,
+    "qwen3-1.7b": 4,
+    "mistral-nemo-12b": 8,
+    "xlstm-125m": 1,
+    "jamba-1.5-large-398b": 8,
+    "seamless-m4t-large-v2": 2,
+    "grok-1-314b": 8,
+    "granite-moe-3b-a800m": 2,
+    "phi-3-vision-4.2b": 4,
+}
+
+# archs whose params+state need FSDP (params sharded over data too) in train
+FSDP_ARCHS = {"jamba-1.5-large-398b", "grok-1-314b"}
+# archs that sequence-shard the residual stream in train (activation memory)
+SEQ_SHARD_TRAIN = {"jamba-1.5-large-398b", "grok-1-314b", "mistral-nemo-12b"}
+# archs with recurrent/conv blocks: no seq-sharded prefill (locality)
+NO_SEQ_PREFILL = {"xlstm-125m", "jamba-1.5-large-398b"}
+
+ALL_ARCHS = list(TRAIN_MICROBATCHES)
+
+# ------------------------------------------------------------------ §Perf
+# Hillclimb variants (EXPERIMENTS.md §Perf): opt-in via plan_cell(perf=True)
+# or `dryrun --perf`. Baseline = the paper-faithful sharding above.
+#   * small-model train (<1B): the model axis hurts — fold it into data
+#     parallelism (batch over BOTH axes, weights replicated): removes every
+#     per-layer TP collective; only the grad all-reduce remains.
+#   * MoE decode: weight-stationary serving — replicate the tiny per-token
+#     activations instead of the weights; weights stay 2-axis resident
+#     (no per-layer FSDP all-gather on the critical path).
+#   * giant-MoE train: bf16 params under Adafactor (halves params+grads
+#     residency).
+PERF_SMALL_TRAIN = {"xlstm-125m", "qwen3-1.7b"}
+PERF_WEIGHT_STATIONARY_DECODE = {"jamba-1.5-large-398b", "grok-1-314b"}
+PERF_BF16_TRAIN = {"jamba-1.5-large-398b", "grok-1-314b"}
+
+
+@dataclass
+class CellPlan:
+    arch: str
+    cell: ShapeCell
+    cfg: ModelConfig
+    model: Model
+    rules: ShardingRules
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Any
+    out_shardings: Any
+    # while-loop trip counts by nesting depth (collective-bytes multipliers)
+    trips_by_depth: Dict[int, float]
+    microbatches: int = 1
+    notes: str = ""
+
+    donate: Tuple[int, ...] = ()
+
+    def lower(self):
+        with self.rules.mesh, use_rules(self.rules):
+            jitted = jax.jit(
+                self.fn,
+                in_shardings=self.in_shardings,
+                out_shardings=self.out_shardings,
+                donate_argnums=self.donate,
+            )
+            return jitted.lower(*self.abstract_args)
+
+
+class CellSkip(Exception):
+    pass
+
+
+def skip_reason(cfg: ModelConfig, cell: ShapeCell) -> Optional[str]:
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "full-attention arch at 524288 ctx — no sub-quadratic mechanism; "
+            "skipped per assignment (DESIGN.md §7)"
+        )
+    return None
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _batch_abstract(cfg: ModelConfig, B: int, S: int, *, labels: bool):
+    """Model inputs for a (B, S) token batch, honoring stub frontends."""
+    d = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    axes = {"tokens": ("batch", None)}
+    if cfg.frontend == "vision":
+        # patches replace the leading frontend_seq positions of the budget
+        st = S - cfg.frontend_seq
+        assert st > 0, "cell seq budget smaller than vision frontend"
+        d["tokens"] = jax.ShapeDtypeStruct((B, st), jnp.int32)
+        d["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_seq, cfg.d_model), cfg.compute_dtype
+        )
+        axes["frontend"] = ("batch", None, None)
+        if labels:
+            d["labels"] = jax.ShapeDtypeStruct((B, st), jnp.int32)
+            axes["labels"] = ("batch", None)
+    elif cfg.frontend == "audio":
+        d["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_seq, cfg.d_model), cfg.compute_dtype
+        )
+        axes["frontend"] = ("batch", None, None)
+        if labels:
+            d["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            axes["labels"] = ("batch", None)
+    elif labels:
+        d["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        axes["labels"] = ("batch", None)
+    return d, axes
+
+
+def _decode_rules(mesh, cfg, *, kv_all_axes: bool) -> ShardingRules:
+    r = make_rules(mesh, cfg)
+    rules = dict(r.rules)
+    rules["embed"] = "data"  # 2-axis weight sharding for serving
+    rules["kv_seq"] = ("data", "model") if kv_all_axes else "model"
+    return ShardingRules(mesh, rules)
+
+
+def _train_rules(mesh, cfg, perf: bool = False) -> ShardingRules:
+    r = make_rules(mesh, cfg)
+    rules = dict(r.rules)
+    if cfg.name in FSDP_ARCHS:
+        rules["embed"] = "data"
+        rules["embed_shard"] = "data"
+    if cfg.name in SEQ_SHARD_TRAIN:
+        rules["act_seq"] = "model"
+    if perf and cfg.name in PERF_SMALL_TRAIN:
+        # fold the model axis into data parallelism: batch over both axes,
+        # every weight replicated → zero per-layer TP collectives
+        dp = ("pod", "data", "model") if "pod" in mesh.shape else ("data", "model")
+        for k in rules:
+            rules[k] = None
+        rules["batch"] = dp
+    return ShardingRules(mesh, rules)
+
+
+def _prefill_rules(mesh, cfg) -> ShardingRules:
+    r = _decode_rules(mesh, cfg, kv_all_axes=False)
+    rules = dict(r.rules)
+    if cfg.name not in NO_SEQ_PREFILL:
+        rules["act_seq"] = "model"
+    return ShardingRules(mesh, rules)
+
+
+def plan_cell(arch: str, cell_name: str, mesh, perf: bool = False,
+              **overrides) -> CellPlan:
+    cfg = get_config(arch, **overrides) if overrides else get_config(arch)
+    cell = SHAPE_CELLS[cell_name]
+    reason = skip_reason(cfg, cell)
+    if reason:
+        raise CellSkip(reason)
+    if cell.kind == "train":
+        return _plan_train(arch, cfg, cell, mesh, perf)
+    if cell.kind == "prefill":
+        return _plan_prefill(arch, cfg, cell, mesh)
+    return _plan_decode(arch, cfg, cell, mesh, perf)
+
+
+# --------------------------------------------------------------- training
+def _plan_train(arch, cfg, cell, mesh, perf: bool = False) -> CellPlan:
+    if perf and arch in PERF_BF16_TRAIN:
+        cfg = cfg.with_(param_dtype=jnp.bfloat16)
+    model = build_model(cfg)
+    rules = _train_rules(mesh, cfg, perf)
+    opt = optim.for_config(cfg)
+    mb = TRAIN_MICROBATCHES.get(arch, 1)
+
+    abs_params = model.abstract_params()
+    param_specs = rules.tree_specs(model.param_axes(), abs_params)
+    abs_opt = jax.eval_shape(opt.init, abs_params)
+    dp_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    opt_specs = optim.zero1_state_specs(opt, param_specs, abs_params, mesh, dp_axes)
+    state_abs = {
+        "params": abs_params,
+        "opt": abs_opt,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    state_specs = {"params": param_specs, "opt": opt_specs, "step": P()}
+
+    B, S = cell.global_batch, cell.seq_len
+    batch_abs, batch_axes = _batch_abstract(cfg, B, S, labels=True)
+    batch_specs = {k: rules.spec(a, batch_abs[k].shape) for k, a in batch_axes.items()}
+
+    fn = make_train_step(
+        model, opt, microbatches=mb,
+        grad_dtype=(jnp.bfloat16 if (perf and cfg.name in PERF_SMALL_TRAIN) else None),
+    )
+    nl = n_periods(cfg)
+    trips = {1: float(mb if mb > 1 else nl), 2: float(nl if mb > 1 else 8.0), 3: 8.0}
+    return CellPlan(
+        arch=arch, cell=cell, cfg=cfg, model=model, rules=rules, fn=fn,
+        abstract_args=(state_abs, batch_abs),
+        in_shardings=(_ns(mesh, state_specs), _ns(mesh, batch_specs)),
+        out_shardings=(_ns(mesh, state_specs), None),
+        trips_by_depth=trips, microbatches=mb, donate=(0,),
+        notes=f"opt={opt.name} mb={mb} fsdp={arch in FSDP_ARCHS} "
+        f"seqshard={arch in SEQ_SHARD_TRAIN}",
+    )
+
+
+# ---------------------------------------------------------------- serving
+def _serve_cfg(cfg: ModelConfig) -> ModelConfig:
+    return cfg.with_(param_dtype=jnp.bfloat16)  # bf16 weights for inference
+
+
+def _cache_specs(model: Model, rules: ShardingRules, B: int, max_len: int):
+    abs_cache = model.cache_spec(B, max_len)
+    axes = model.cache_axes()
+    return abs_cache, rules.tree_specs(axes, abs_cache)
+
+
+def _plan_prefill(arch, cfg, cell, mesh) -> CellPlan:
+    cfg = _serve_cfg(cfg)
+    model = build_model(cfg)
+    rules = _prefill_rules(mesh, cfg)
+    B, S = cell.global_batch, cell.seq_len
+
+    abs_params = model.abstract_params()
+    param_specs = rules.tree_specs(model.param_axes(), abs_params)
+    batch_abs, batch_axes = _batch_abstract(cfg, B, S, labels=False)
+    batch_specs = {k: rules.spec(a, batch_abs[k].shape) for k, a in batch_axes.items()}
+
+    # prefill cache covers the cell's full budget (vision: patches + text)
+    _, cache_specs = _cache_specs(model, rules, B, S)
+    fn = make_prefill_step(model, max_len=S)
+    nl = n_periods(cfg) + (
+        n_periods(cfg, cfg.num_encoder_layers) if cfg.encoder_decoder else 0
+    )
+    trips = {1: float(nl), 2: float(max(S // 512, 1)), 3: 64.0}
+    return CellPlan(
+        arch=arch, cell=cell, cfg=cfg, model=model, rules=rules, fn=fn,
+        abstract_args=(abs_params, batch_abs),
+        in_shardings=(_ns(mesh, param_specs), _ns(mesh, batch_specs)),
+        out_shardings=(None, _ns(mesh, cache_specs)),
+        trips_by_depth=trips,
+        notes=f"bf16 params, seq_shard={arch not in NO_SEQ_PREFILL}",
+    )
+
+
+def _plan_decode(arch, cfg, cell, mesh, perf: bool = False) -> CellPlan:
+    cfg = _serve_cfg(cfg)
+    model = build_model(cfg)
+    B, S = cell.global_batch, cell.seq_len
+    rules = _decode_rules(mesh, cfg, kv_all_axes=(B == 1))
+    if perf and arch in PERF_WEIGHT_STATIONARY_DECODE:
+        # weight-stationary decode: replicate the (tiny) per-token batch,
+        # keep weights resident 2-axis sharded — kills per-layer all-gathers
+        rules = ShardingRules(mesh, dict(rules.rules, batch=None))
+
+    abs_params = model.abstract_params()
+    param_specs = rules.tree_specs(model.param_axes(), abs_params)
+    abs_cache, cache_specs = _cache_specs(model, rules, B, S)
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_spec = rules.spec(("batch", None), (B, 1))
+
+    raw_decode = make_decode_step(model)
+
+    def decode_step(params, cache, tokens):
+        nxt, logits, new_cache = raw_decode(params, cache, tokens)
+        return nxt, new_cache
+
+    nl = n_periods(cfg)
+    trips = {1: float(nl), 2: 8.0}
+    return CellPlan(
+        arch=arch, cell=cell, cfg=cfg, model=model, rules=rules, fn=decode_step,
+        abstract_args=(abs_params, abs_cache, tok_abs),
+        in_shardings=(
+            _ns(mesh, param_specs),
+            _ns(mesh, cache_specs),
+            NamedSharding(mesh, tok_spec),
+        ),
+        out_shardings=(None, _ns(mesh, cache_specs)),
+        trips_by_depth=trips, donate=(1,),
+        notes=f"bf16 params, kv_seq={'(data,model)' if B == 1 else 'model'}",
+    )
+
+
+def input_specs(arch: str, cell_name: str, mesh=None):
+    """Assignment API: ShapeDtypeStruct stand-ins for every model input of
+    the (arch × cell). Returns the plan's abstract argument tuple."""
+    if mesh is None:
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh()
+    return plan_cell(arch, cell_name, mesh).abstract_args

@@ -1,0 +1,45 @@
+"""Static FLOPs accounting for scan bodies.
+
+XLA's cost_analysis counts a `lax.scan` body once (verified empirically —
+see EXPERIMENTS.md §Roofline). Model code calls ``add_scan_flops`` with the
+*analytic* FLOPs that live inside scan bodies (a trace-time python float);
+``measure_scan_flops`` collects the total via an abstract evaluation, so the
+roofline can report corrected compute terms.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+_ACC: contextvars.ContextVar = contextvars.ContextVar("scan_flops", default=None)
+_MULT: contextvars.ContextVar = contextvars.ContextVar("scan_mult", default=1.0)
+
+
+def add_scan_flops(flops: float) -> None:
+    acc = _ACC.get()
+    if acc is not None:
+        acc[0] += float(flops) * _MULT.get()
+
+
+@contextlib.contextmanager
+def scan_scope(trip_count: int):
+    """Everything declared inside is traced once but *executed* trip_count
+    times (a surrounding lax.scan over stacked layers)."""
+    tok = _MULT.set(_MULT.get() * trip_count)
+    try:
+        yield
+    finally:
+        _MULT.reset(tok)
+
+
+def measure_scan_flops(fn, *abstract_args, **kw) -> float:
+    """Abstractly evaluate fn, returning analytic scan-body FLOPs it declares."""
+    acc = [0.0]
+    tok = _ACC.set(acc)
+    try:
+        jax.eval_shape(fn, *abstract_args, **kw)
+    finally:
+        _ACC.reset(tok)
+    return acc[0]

@@ -1,0 +1,102 @@
+"""Parameter schema: single source of truth for shapes, init and logical axes.
+
+Every module declares its parameters as a (nested) tree of :class:`ParamSpec`.
+From one spec tree we derive:
+  * materialized parameters (``init_tree``) with per-path deterministic RNG,
+  * the logical-axis tree (``axes_tree``) consumed by ``repro.sharding``,
+  * abstract shapes (``abstract_tree``) for ``jax.eval_shape``-style plumbing.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Declares one parameter tensor.
+
+    init kinds:
+      normal    — N(0, scale/sqrt(fan_in)) with fan_in = shape[fan_in_axis]
+      trunc     — truncated normal, stddev=scale (absolute)
+      zeros/ones
+      identity_conv — dirac init for depthwise conv kernels
+    """
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"
+    scale: float = 1.0
+    fan_in_axis: int = -2
+    dtype: Any = None  # None → caller default
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"rank mismatch: shape {self.shape} vs axes {self.axes}")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _fold_key(root: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.md5(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(root, h)
+
+
+def materialize(spec: ParamSpec, key: jax.Array, default_dtype) -> jax.Array:
+    dtype = spec.dtype if spec.dtype is not None else default_dtype
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "normal":
+        fan_in = shape[spec.fan_in_axis] if len(shape) >= 2 else shape[0]
+        std = spec.scale / max(float(fan_in), 1.0) ** 0.5
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    if spec.init == "trunc":
+        return (
+            jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * spec.scale
+        ).astype(dtype)
+    if spec.init == "identity_conv":  # (width, channels): impulse at last tap
+        w = jnp.zeros(shape, jnp.float32).at[-1, :].set(1.0)
+        return w.astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_tree(spec_tree, key: jax.Array, default_dtype=jnp.float32):
+    """Materialize a spec tree into parameters (path-deterministic RNG)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(spec_tree, is_leaf=_is_spec)
+    leaves = [materialize(s, _fold_key(key, _path_str(p)), default_dtype) for p, s in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def axes_tree(spec_tree):
+    """Extract the logical-axis tree (same structure, tuples of axis names)."""
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=_is_spec)
+
+
+def abstract_tree(spec_tree, default_dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype),
+        spec_tree,
+        is_leaf=_is_spec,
+    )
+
+
+def param_count(spec_tree) -> int:
+    import math
+
+    return sum(
+        math.prod(s.shape)
+        for s in jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    )

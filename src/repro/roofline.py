@@ -1,0 +1,457 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+  compute    = FLOPs / (chips × 197e12)
+  memory     = HBM bytes / (chips × 819e9)
+  collective = wire bytes per device / 50e9
+
+XLA's ``cost_analysis()`` counts every ``while`` body **once** (verified in
+EXPERIMENTS.md §Roofline-method), and all heavy compute here lives under
+scans (layer-period scan, microbatch scan, flash KV scan), so raw HLO FLOPs
+undercount by orders of magnitude. We therefore use **analytic** FLOPs/bytes
+(exact closed forms for every einsum in the model; activation-traffic terms
+are documented estimators) for the roofline terms and report the raw
+cost_analysis numbers alongside as a cross-check.
+
+Collective bytes ARE parsed from the partitioned HLO (shapes there are
+per-device): each collective op's wire bytes are computed from its local
+shape and participant count, multiplied by the trip count of the while
+loops enclosing it (nesting depth → known scan trip counts from the plan).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.transformer import period_layout, n_periods
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+# =====================================================================
+# Analytic FLOPs
+# =====================================================================
+def _attn_flops(cfg, B, S, Sk, causal=True, cross=False):
+    kv, g, hd, d = cfg.num_kv_heads, cfg.q_per_kv, cfg.head_dim, cfg.d_model
+    proj = 2.0 * B * S * d * (kv * g * hd) * 2  # wq + wo
+    proj += 2.0 * B * (Sk if cross else S) * d * (kv * hd) * 2  # wk + wv
+    area = S * Sk * (0.5 if (causal and not cross and S == Sk) else 1.0)
+    attn = 4.0 * B * area * kv * g * hd
+    return proj + attn
+
+
+def _mlp_flops(cfg, B, S, f=None):
+    f = f if f is not None else cfg.d_ff
+    n = 3 if cfg.mlp_kind == "swiglu" else 2
+    return 2.0 * B * S * cfg.d_model * f * n
+
+
+def _moe_flops(cfg, B, S):
+    from repro.models.moe import _capacity
+
+    m = cfg.moe
+    C = _capacity(S, cfg)
+    n = 3 if cfg.mlp_kind == "swiglu" else 2
+    router = 2.0 * B * S * cfg.d_model * m.num_experts
+    expert = 2.0 * B * m.num_experts * C * cfg.d_model * m.expert_d_ff * n
+    return router + expert
+
+
+def _mamba_flops(cfg, B, S):
+    from repro.models.ssm import mamba_dims
+
+    di, H, N, Pd = mamba_dims(cfg)
+    d = cfg.d_model
+    mc = cfg.mamba
+    L = min(mc.chunk, S)
+    nc = max(S // L, 1)
+    proj = 2.0 * B * S * d * (2 * di + 2 * N + H)  # wz,wx,wB,wC,wdt
+    conv = 2.0 * B * S * (di + 2 * N) * mc.d_conv
+    G = 2.0 * B * nc * L * L * N  # C·B pair terms
+    intra = 2.0 * B * nc * L * L * H * Pd + G
+    states = 2.0 * B * S * N * H * Pd  # chunk states
+    inter = 2.0 * B * S * N * H * Pd  # y_inter
+    out = 2.0 * B * S * di * d
+    return proj + conv + intra + states + inter + out
+
+
+def _mlstm_flops(cfg, B, S):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    di = int(d * xc.mlstm_proj_factor)
+    H = cfg.num_heads
+    Pd = di // H
+    from repro.models.xlstm import MLSTM_CHUNK
+
+    L = min(MLSTM_CHUNK, S)
+    up = 2.0 * B * S * d * 2 * di
+    qkv = 3 * 2.0 * B * S * di * di
+    cell = 2.0 * B * H * S * L * (3 * Pd)  # QK^T, WV, state einsums
+    out = 2.0 * B * S * di * d
+    return up + qkv + cell + out
+
+
+def _slstm_flops(cfg, B, S):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    df = int(d * xc.slstm_proj_factor)
+    wx = 2.0 * B * S * d * 4 * d
+    rec = 2.0 * B * S * 4 * H * dh * dh
+    mlp = 2.0 * B * S * d * 2 * df + 2.0 * B * S * df * d
+    return wx + rec + mlp
+
+
+def layer_flops(cfg, kind: str, is_moe: bool, B, S, Sk=None, decoder=False):
+    Sk = Sk if Sk is not None else S
+    f = 0.0
+    if kind == "attn":
+        f += _attn_flops(cfg, B, S, Sk)
+        if decoder and cfg.encoder_decoder:
+            f += _attn_flops(cfg, B, S, cfg.frontend_seq, cross=True)
+    elif kind == "mamba":
+        f += _mamba_flops(cfg, B, S)
+    elif kind == "mlstm":
+        f += _mlstm_flops(cfg, B, S)
+    elif kind == "slstm":
+        f += _slstm_flops(cfg, B, S)
+    if is_moe:
+        f += _moe_flops(cfg, B, S)
+    elif cfg.d_ff > 0:
+        f += _mlp_flops(cfg, B, S)
+    return f
+
+
+def forward_flops(cfg, B, S, Sk=None, include_head=True) -> float:
+    """One forward pass over (B, S) tokens (self-attention context Sk)."""
+    total = 0.0
+    layout = period_layout(cfg)
+    n = n_periods(cfg)
+    Sx = S + (cfg.frontend_seq if cfg.frontend == "vision" else 0)
+    for kind, is_moe in layout:
+        total += layer_flops(cfg, kind, is_moe, B, Sx, Sk, decoder=cfg.encoder_decoder) * n
+    if cfg.encoder_decoder:
+        ne = n_periods(cfg, cfg.num_encoder_layers)
+        F = cfg.frontend_seq
+        for kind, is_moe in layout:
+            total += layer_flops(cfg, kind, is_moe, B, F, F) * ne
+    if include_head:
+        total += 2.0 * B * Sx * cfg.d_model * cfg.vocab_size
+    return total
+
+
+def decode_flops(cfg, B, cache_len: int) -> float:
+    """One decode step: S=1, attention against cache_len keys."""
+    total = 0.0
+    layout = period_layout(cfg)
+    n = n_periods(cfg)
+    for kind, is_moe in layout:
+        if kind == "attn":
+            f = _attn_flops(cfg, B, 1, cache_len, causal=False)
+            if cfg.encoder_decoder:
+                f += _attn_flops(cfg, B, 1, cfg.frontend_seq, cross=True)
+        elif kind == "mamba":
+            from repro.models.ssm import mamba_dims
+
+            di, H, N, Pd = mamba_dims(cfg)
+            f = 2.0 * B * cfg.d_model * (2 * di + 2 * N + H) + 4.0 * B * H * N * Pd + 2.0 * B * di * cfg.d_model
+        elif kind == "mlstm":
+            di = int(cfg.d_model * cfg.xlstm.mlstm_proj_factor)
+            Pd = di // cfg.num_heads
+            f = 2.0 * B * cfg.d_model * 2 * di + 3 * 2.0 * B * di * di \
+                + 4.0 * B * cfg.num_heads * Pd * Pd + 2.0 * B * di * cfg.d_model
+        elif kind == "slstm":
+            dh = cfg.d_model // cfg.num_heads
+            f = 2.0 * B * cfg.d_model * 4 * cfg.d_model \
+                + 2.0 * B * 4 * cfg.num_heads * dh * dh \
+                + _slstm_flops(cfg, B, 1) * 0  # mlp counted below
+            df = int(cfg.d_model * cfg.xlstm.slstm_proj_factor)
+            f += 2.0 * B * cfg.d_model * 2 * df + 2.0 * B * df * cfg.d_model
+        else:
+            f = 0.0
+        if is_moe:
+            f += _moe_flops(cfg, B, 1)
+        elif cfg.d_ff > 0:
+            f += _mlp_flops(cfg, B, 1)
+        total += f * n
+    total += 2.0 * B * cfg.d_model * cfg.vocab_size
+    return total
+
+
+def count_params(cfg) -> Tuple[float, float, float]:
+    """(total, active, embedding) parameter counts."""
+    from repro.models.model import build_model
+    from repro.models.schema import ParamSpec
+    import jax
+
+    model = build_model(cfg)
+    spec = model.spec()
+    total = 0.0
+    expert = 0.0
+    embed = float(cfg.vocab_size * cfg.d_model) * (1 if cfg.tie_embeddings else 2)
+    for leaf in jax.tree.leaves(spec, is_leaf=lambda x: isinstance(x, ParamSpec)):
+        sz = float(math.prod(leaf.shape))
+        total += sz
+        # expert FFN weights: rank-3 (+1 with the stacked "layers" dim)
+        if "experts" in leaf.axes and len(leaf.shape) >= 3:
+            expert += sz
+    if cfg.moe is not None:
+        active = total - expert * (1.0 - cfg.moe.experts_per_token / cfg.moe.num_experts)
+    else:
+        active = total
+    return total, active, embed
+
+
+# =====================================================================
+# Analytic HBM bytes (documented estimators — see EXPERIMENTS.md)
+# =====================================================================
+def train_bytes(cfg, plan, B, S) -> float:
+    total_p, _, _ = count_params(cfg)
+    pb = total_p * 4  # f32 params
+    mb = plan.microbatches
+    weights = 2 * mb * pb + 6 * pb  # fwd+bwd reads per microbatch + optimizer r/w
+    grads = 2 * mb * pb  # accumulate r+w per microbatch
+    n = n_periods(cfg) * (2 if cfg.encoder_decoder else 1)
+    act = 4.0 * n * B * S * cfg.d_model * 2  # carry saves w+r + recompute
+    logits = 3.0 * B * S * cfg.vocab_size * 2
+    kvread = 0.0
+    if any(k == "attn" for k, _ in period_layout(cfg)):
+        n_attn = sum(1 for k, _ in period_layout(cfg) if k == "attn") * n_periods(cfg)
+        nq = max(S // 4096, 1)
+        kvread = 2.0 * B * nq * S * cfg.num_kv_heads * cfg.head_dim * 2 * n_attn * 3
+    return weights + grads + act + logits + kvread
+
+
+def prefill_bytes(cfg, B, S) -> float:
+    total_p, _, _ = count_params(cfg)
+    pb = total_p * 2  # bf16
+    n_attn = sum(1 for k, _ in period_layout(cfg) if k == "attn") * n_periods(cfg)
+    cache_w = 2.0 * B * S * cfg.num_kv_heads * cfg.head_dim * 2 * n_attn
+    act = 2.0 * (n_periods(cfg) * (2 if cfg.encoder_decoder else 1)) * B * S * cfg.d_model * 2
+    nq = max(S // 4096, 1)
+    kvread = 2.0 * B * nq * S * cfg.num_kv_heads * cfg.head_dim * 2 * n_attn
+    return pb + cache_w + act + kvread
+
+
+def decode_bytes(cfg, B, cache_len) -> float:
+    total_p, _, _ = count_params(cfg)
+    pb = total_p * 2  # every weight read once
+    n_attn = sum(1 for k, _ in period_layout(cfg) if k == "attn") * n_periods(cfg)
+    cache_r = 2.0 * B * cache_len * cfg.num_kv_heads * cfg.head_dim * 2 * n_attn
+    state = 0.0
+    for kind, _ in period_layout(cfg):
+        if kind == "mamba":
+            from repro.models.ssm import mamba_dims
+
+            di, H, N, Pd = mamba_dims(cfg)
+            state += 2.0 * B * H * N * Pd * 4 * n_periods(cfg)
+        elif kind == "mlstm":
+            di = int(cfg.d_model * cfg.xlstm.mlstm_proj_factor)
+            Pd = di // cfg.num_heads
+            state += 2.0 * B * cfg.num_heads * Pd * Pd * 4 * n_periods(cfg)
+    return pb + cache_r + state
+
+
+# =====================================================================
+# HLO collective parsing
+# =====================================================================
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_TYPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\([^)]*\)\s*->.*{")
+_WHILE_RE = re.compile(r"while\(.*?body=%?([\w\.\-]+)")
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, trips_by_depth: Dict[int, float]):
+    """Per-device wire-byte totals by collective op kind.
+
+    Wire-byte model per op (local = per-device bytes from the partitioned
+    shape, n = participant group size):
+      all-reduce        2·local·(n-1)/n      (ring)
+      all-gather        local·(n-1)/n        (result is the gathered shape)
+      reduce-scatter    local·(n-1)          (input = n·result)
+      all-to-all        local·(n-1)/n
+      collective-permute local
+    Ops inside while bodies are multiplied by the enclosing scan trip counts
+    (nesting depth → plan-known trips).
+    """
+    # computation -> list of (kind, wire_bytes)
+    comp_ops: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    comp_whiles: Dict[str, List[str]] = defaultdict(list)
+    current = None
+    entry = None
+    for line in hlo_text.splitlines():
+        hdr = _COMP_HDR.match(line.strip()) if "{" in line else None
+        if hdr and ("->" in line):
+            current = hdr.group(1)
+            if line.lstrip().startswith("ENTRY"):
+                entry = current
+            continue
+        if current is None:
+            continue
+        m = _COLL_RE.search(line)
+        if m:
+            local = _type_bytes(m.group(1))
+            kind = m.group(2)
+            g = _GROUPS_RE.search(line)
+            n = int(g.group(2)) if g else 2
+            if kind == "all-reduce":
+                wire = 2.0 * local * (n - 1) / max(n, 1)
+            elif kind == "all-gather":
+                wire = local * (n - 1) / max(n, 1)
+            elif kind == "reduce-scatter":
+                wire = local * (n - 1)
+            elif kind == "all-to-all":
+                wire = local * (n - 1) / max(n, 1)
+            else:
+                wire = local
+            comp_ops[current].append((kind, wire))
+        w = _WHILE_RE.search(line)
+        if w:
+            comp_whiles[current].append(w.group(1))
+
+    # nesting depth per computation via BFS from entry
+    depth: Dict[str, int] = {}
+    if entry is not None:
+        depth[entry] = 0
+        frontier = [entry]
+        while frontier:
+            nxt = []
+            for c in frontier:
+                for b in comp_whiles.get(c, []):
+                    if b not in depth:
+                        depth[b] = depth[c] + 1
+                        nxt.append(b)
+            frontier = nxt
+
+    totals: Dict[str, float] = defaultdict(float)
+    for comp, ops in comp_ops.items():
+        d = depth.get(comp)
+        if d is None:
+            # fusion/helper computations: attribute at entry depth
+            mult = 1.0
+        else:
+            mult = 1.0
+            for dd in range(1, d + 1):
+                mult *= trips_by_depth.get(dd, 1.0)
+        for kind, wire in ops:
+            totals[kind] += wire * mult
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return dict(totals)
+
+
+# =====================================================================
+# Roofline report
+# =====================================================================
+@dataclass
+class Roofline:
+    arch: str
+    cell: str
+    mesh: str
+    chips: int
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float  # per-device wire bytes
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+    raw_cost: Dict[str, float]
+    memory_per_device: float
+    coll_breakdown: Dict[str, float] = field(default_factory=dict)
+    notes: str = ""
+
+    def row(self) -> str:
+        return (
+            f"{self.arch},{self.cell},{self.mesh},{self.chips},"
+            f"{self.flops:.3e},{self.hbm_bytes:.3e},{self.coll_bytes:.3e},"
+            f"{self.t_compute * 1e3:.3f},{self.t_memory * 1e3:.3f},"
+            f"{self.t_collective * 1e3:.3f},{self.bottleneck},"
+            f"{self.useful_ratio:.3f},{self.memory_per_device / 2**30:.2f}"
+        )
+
+
+HEADER = (
+    "arch,cell,mesh,chips,flops,hbm_bytes,coll_bytes_per_dev,"
+    "t_compute_ms,t_memory_ms,t_collective_ms,bottleneck,"
+    "useful_flops_ratio,mem_GiB_per_dev"
+)
+
+
+def analyze(plan, compiled, mesh_name: str) -> Roofline:
+    cfg, cell = plan.cfg, plan.cell
+    chips = math.prod(plan.rules.mesh.shape.values())
+    B, S = cell.global_batch, cell.seq_len
+
+    if cell.kind == "train":
+        fwd = forward_flops(cfg, B, S)
+        flops = 3.0 * fwd
+        hbm = train_bytes(cfg, plan, B, S)
+        total_p, active_p, embed_p = count_params(cfg)
+        model_flops = 6.0 * (active_p - embed_p / 2) * B * S
+    elif cell.kind == "prefill":
+        flops = forward_flops(cfg, B, S)
+        hbm = prefill_bytes(cfg, B, S)
+        total_p, active_p, embed_p = count_params(cfg)
+        model_flops = 2.0 * (active_p - embed_p / 2) * B * S
+    else:
+        flops = decode_flops(cfg, B, S)
+        hbm = decode_bytes(cfg, B, S)
+        total_p, active_p, embed_p = count_params(cfg)
+        model_flops = 2.0 * (active_p - embed_p / 2) * B
+    try:
+        raw = compiled.cost_analysis()
+        raw_cost = {
+            "flops": float(raw.get("flops", -1.0)),
+            "bytes accessed": float(raw.get("bytes accessed", -1.0)),
+        }
+    except Exception:  # pragma: no cover
+        raw_cost = {}
+    ma = compiled.memory_analysis()
+    mem_dev = float(
+        ma.argument_size_in_bytes + ma.temp_size_in_bytes + ma.generated_code_size_in_bytes
+    )
+    colls = parse_collectives(compiled.as_text(), plan.trips_by_depth)
+
+    t_c = flops / (chips * PEAK_FLOPS_BF16)
+    t_m = hbm / (chips * HBM_BW)
+    t_x = colls.get("total", 0.0) / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        arch=plan.arch, cell=cell.name, mesh=mesh_name, chips=chips,
+        flops=flops, hbm_bytes=hbm, coll_bytes=colls.get("total", 0.0),
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / flops if flops else 0.0),
+        raw_cost=raw_cost, memory_per_device=mem_dev,
+        coll_breakdown={k: v for k, v in colls.items() if k != "total"},
+        notes=plan.notes,
+    )

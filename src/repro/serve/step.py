@@ -1,0 +1,47 @@
+"""Serving steps: prefill (cache build) and single-token decode, plus a
+tiny batched serving driver used by examples/serving.py."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        logits, cache, _ = model.apply(params, batch, mode="prefill", max_len=max_len)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, sample: str = "greedy"):
+    def decode_step(params, cache, tokens):
+        """tokens (B,1) → (next_token (B,1), logits (B,1,V), new_cache)."""
+        logits, new_cache, _ = model.apply(
+            params, {"tokens": tokens}, mode="decode", cache=cache
+        )
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, new_cache
+
+    return decode_step
+
+
+def generate(model: Model, params, prompt_tokens, *, steps: int, max_len: int,
+             batch_extra: Optional[Dict[str, Any]] = None):
+    """Greedy generation loop (host-driven; each step jittable)."""
+    batch = {"tokens": prompt_tokens}
+    if batch_extra:
+        batch.update(batch_extra)
+    prefill = jax.jit(make_prefill_step(model, max_len))
+    decode = jax.jit(make_decode_step(model))
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for _ in range(steps - 1):
+        tok, _, cache = decode(params, cache, tok)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,173 @@
+"""Logical-axis sharding: rules mapping logical axes → mesh axes.
+
+Model code annotates parameters (via ParamSpec.axes) and activations (via
+``lac``) with *logical* axis names. A :class:`ShardingRules` object — chosen
+per (config, mesh, shape-cell) — resolves them to ``PartitionSpec``s, with
+divisibility fallbacks (an axis that doesn't divide is left unsharded).
+
+Installed via context manager so model code stays mesh-agnostic::
+
+    with use_rules(rules):
+        logits = model.apply(params, batch)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+def is_axes(x) -> bool:
+    """Leaf predicate for logical-axes tuples (tuples of str/None)."""
+    return isinstance(x, tuple) and all(e is None or isinstance(e, str) for e in x)
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar("sharding_rules", default=None)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    rules: Dict[str, MeshAxes]  # logical axis -> mesh axis (or tuple / None)
+
+    def _mesh_size(self, ax: MeshAxes) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, str):
+            return self.mesh.shape[ax]
+        return math.prod(self.mesh.shape[a] for a in ax)
+
+    def spec(self, logical_axes: Sequence[Optional[str]], shape=None) -> P:
+        """Resolve logical axes to a PartitionSpec; check divisibility if
+        shape given (undersized dims fall back to replication)."""
+        out, used = [], set()
+        for i, name in enumerate(logical_axes):
+            ax = self.rules.get(name) if name else None
+            if ax is not None:
+                flat = (ax,) if isinstance(ax, str) else tuple(ax)
+                if any(a in used for a in flat):
+                    ax = None  # mesh axis already consumed by an earlier dim
+                elif shape is not None and shape[i] % self._mesh_size(ax) != 0:
+                    ax = None  # not divisible -> replicate
+                else:
+                    used.update(flat)
+            out.append(ax)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+    def tree_specs(self, axes_tree, abstract_tree=None):
+        """Map an axes tree (+ optional shapes) to a PartitionSpec tree."""
+        if abstract_tree is None:
+            return jax.tree.map(lambda a: self.spec(a), axes_tree, is_leaf=is_axes)
+        # flatten the axes tree on axes-tuple leaves, align abstract subtrees
+        flat_a, treedef = jax.tree_util.tree_flatten(axes_tree, is_leaf=is_axes)
+        flat_s = treedef.flatten_up_to(abstract_tree)
+        return treedef.unflatten(
+            [self.spec(a, s.shape) for a, s in zip(flat_a, flat_s)]
+        )
+
+    def tree_shardings(self, axes_tree, abstract_tree=None):
+        return jax.tree.map(
+            lambda sp: NamedSharding(self.mesh, sp),
+            self.tree_specs(axes_tree, abstract_tree),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    tok = _ACTIVE.set(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _ACTIVE.get()
+
+
+def lac(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Logical activation constraint — no-op without installed rules."""
+    r = current_rules()
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, r.sharding(logical_axes, x.shape))
+
+
+# ------------------------------------------------------------ rule presets
+def make_rules(
+    mesh: Mesh,
+    cfg=None,
+    *,
+    cell_kind: str = "train",
+    seq_shard: bool = False,
+    zero1: bool = True,
+) -> ShardingRules:
+    """Production rule set.
+
+    batch → (pod, data); model-parallel tensor axes → model; optimizer-state
+    extra sharding handled in train/optim (ZeRO-1 over (pod,data)).
+
+    seq_shard: shard activation seq over 'data' (context/sequence parallelism
+    for prefill with tiny per-device batch).
+    """
+    axes = dict(mesh.shape)
+    dp: MeshAxes = ("pod", "data") if "pod" in axes else "data"
+    rules: Dict[str, MeshAxes] = {
+        "batch": dp,
+        "cache_batch": dp,  # KV/state cache batch dim (decouplable from acts)
+        "seq": ("model" if seq_shard else None),
+        "embed": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "model",
+        "expert_mlp": "model",  # picked up when `experts` doesn't divide
+        "state": None,
+        "conv": None,
+        "inner": "model",  # mamba/xlstm expanded inner dim
+        "inner_heads": "model",  # mamba SSD head dim (activations)
+        "layers": None,
+        # embedding table: vocab-sharded (GSPMD's native embedding-gather
+        # partitioning: local gather + mask + all-reduce)
+        "vocab_table": "model",
+        "embed_shard": None,
+        # activation-only axes
+        "residual": None,  # residual-stream feature dim
+        "act_seq": None,   # residual-stream seq dim ("model" = sequence parallel)
+        "kv_seq": None,    # KV-cache seq dim (decode cells shard this)
+        "logit_vocab": "model",
+    }
+    if cfg is not None and "model" in axes:
+        m = axes["model"]
+        kv, g = cfg.num_kv_heads, cfg.q_per_kv
+        if kv % m == 0:
+            rules["kv_heads"], rules["q_per_kv"] = "model", None
+        elif g % m == 0:
+            # undersized KV heads (e.g. glm4 kv=2): shard the q-group dim,
+            # replicate K/V heads
+            rules["kv_heads"], rules["q_per_kv"] = None, "model"
+        else:
+            # neither divides (e.g. qwen3 kv=8,g=2 on model=16): attention
+            # runs replicated over `model`; MLP/embed still shard
+            rules["kv_heads"], rules["q_per_kv"] = None, None
+    else:
+        rules["q_per_kv"] = None
+    return ShardingRules(mesh, rules)
+
+
+def batch_specs(rules: ShardingRules, tree_axes):
+    return rules.tree_specs(tree_axes)

@@ -1,0 +1,2 @@
+from repro.sim.des import Sim, Resource  # noqa: F401
+from repro.sim.cluster import Cluster, TESTBED  # noqa: F401

@@ -1,0 +1,319 @@
+"""DES workload model for the OffloadDB experiments (Figs. 7a, 8, 10, 11).
+
+Mechanics (why the paper's effects emerge here):
+  * Every client op pays initiator CPU + WAL bytes over the fabric; cluster
+    file systems additionally serialize each op through a single-server
+    journal/metadata path (the Fig. 2 overhead) — OCFS2 ~6 µs/op,
+    GFS2 ~12 µs/op (lower baseline, finer locks).
+  * MemTable fills spawn flush jobs; every `l0_trigger` flushes spawn an
+    L0→L1 compaction; level-l jobs cascade with 1/`job_ratio` frequency and
+    ~2.5× size growth — sustained merge demand ≈ 6× ingest bytes.
+  * Local (no offload): merges burn initiator cores AND move 2× job bytes
+    over the initiator's fabric link → write stalls once the backlog passes
+    `stall_backlog` (RocksDB slowdown/stop).
+  * Offload to storage: merges run near-data (no fabric bytes), on slower
+    cores, accelerated by the Offload Cache; Log Recycling removes the
+    flush's second data crossing (offsets only).
+  * Offload to peer: full-speed cores, but job bytes cross two links.
+  * OCFS2 with TWO writers (initiator + offload target) serializes every
+    job and a share of foreground ops on the directory lock → offloading
+    makes it WORSE (the paper's key negative result); GFS2's block-grain
+    locks cost messages but parallelize → it scales from a lower base.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.admission import AcceptAll, AdmissionPolicy
+from repro.sim.cluster import GB, Cluster, TestbedSpec, TESTBED
+from repro.sim.des import Sim
+
+MB = 1e6
+
+JOURNAL_PER_OP = {"ext4": 0.0, "offloadfs": 0.0, "ocfs2": 2e-6, "gfs2": 3e-6}
+# cluster FSs journal DATA writes too (serialized per node): s per MB written
+JOURNAL_PER_MB = {"ext4": 0.0, "offloadfs": 0.0, "ocfs2": 2.2e-3, "gfs2": 3.2e-3}
+
+
+@dataclass
+class KVParams:
+    system: str = "offloadfs"  # ext4 | ocfs2 | gfs2 | offloadfs
+    n_ops: int = 300_000
+    write_ratio: float = 1.0
+    value_bytes: int = 1024
+    key_bytes: int = 24
+    client_threads: int = 32  # modeled as client_procs coarse streams
+    client_procs: int = 8
+    memtable_bytes: float = 4 * MB
+    l0_trigger: int = 4
+    levels: int = 4
+    job_ratio: int = 4  # level-l jobs per level-(l+1) job
+    size_growth: float = 3.0  # job size growth per level
+    merge_rate: float = 200e6  # bytes/s/core merge (I/O-inclusive)
+    subcompactions: int = 4  # intra-job parallelism (RocksDB subcompactions)
+    offload_levels: int = 0  # 0=Local; k → offload jobs with level < k
+    offload_flush: bool = False
+    log_recycling: bool = False
+    offload_cache: bool = False
+    l0_cache: bool = False
+    sync_wal: bool = False
+    peer: bool = False
+    read_hit_ratio: float = 0.6
+    read_amp: float = 2.0
+    stall_backlog: int = 5
+    batch: int = 128
+    io_bw_fabric: float = 1.2e9  # per-job compaction I/O via PoseidonOS volume
+    io_bw_near: float = 6.0e9    # near-data (SPDK direct on the array)
+    io_bw_peer: float = 2.0e9    # peer's dedicated link, full duplex
+    miss_latency: float = 110e-6  # per point-lookup storage round trip
+
+
+@dataclass
+class KVResult:
+    throughput: float
+    latencies: List[float]
+    storage_cpu_util: float
+    initiator_cpu_util: float
+    net_bytes: float
+    stall_time: float
+    makespan: float
+
+    @property
+    def p50(self):
+        s = sorted(self.latencies)
+        return s[len(s) // 2] if s else 0.0
+
+    @property
+    def p99(self):
+        s = sorted(self.latencies)
+        return s[min(len(s) - 1, int(len(s) * 0.99))] if s else 0.0
+
+
+def make_policy(spec_str, sim: Sim, cpu_probe) -> AdmissionPolicy:
+    from repro.core.admission import CPUThreshold, RejectAll, TokenRing
+
+    if spec_str in (None, "accept"):
+        return AcceptAll()
+    if spec_str == "reject":
+        return RejectAll()
+    if spec_str.startswith("cpu:"):
+        return CPUThreshold(cpu_probe, float(spec_str.split(":")[1]))
+    if spec_str.startswith("token:"):
+        _, n, ttl = spec_str.split(":")
+        return TokenRing(int(n), float(ttl), clock=lambda: sim.now)
+    raise ValueError(spec_str)
+
+
+def run_kv(params: KVParams, *, instances: int = 1,
+           policy: Optional[object] = None,
+           spec: TestbedSpec = TESTBED) -> KVResult:
+    sim = Sim()
+    # one extra node when offloading to a peer
+    n_nodes = instances + (1 if params.peer else 0)
+    cl = Cluster(sim, spec, n_initiators=n_nodes)
+    peer_id = n_nodes - 1
+    dirlock = sim.resource("dirlock", 1.0 / spec.dlm_rtt)
+    journals = [sim.resource(f"journal{i}", 1.0) for i in range(instances)]
+    journal_s = sim.resource("journal_storage", 1.0)  # target-node journal
+    state = {
+        "backlog": [list() for _ in range(instances)],
+        "stall": [0.0] * instances,
+        "net_bytes": 0.0,
+        "inflight_storage_cores": 0,
+        "latencies": [],
+    }
+    cpu_probe = lambda: state["inflight_storage_cores"] / spec.storage_cores
+    if policy is None or isinstance(policy, str):
+        policy = make_policy(policy, sim, cpu_probe)
+
+    sysname = params.system
+    is_cluster = sysname in ("ocfs2", "gfs2")
+    j_per_op = JOURNAL_PER_OP[sysname]
+    two_writers = params.offload_levels > 0 or params.offload_flush or instances > 1
+    rec = params.key_bytes + params.value_bytes
+
+    j_per_mb = JOURNAL_PER_MB[sysname]
+
+    def job_locks(i, nbytes, *, remote: bool, via_peer: bool = False):
+        """Cluster-FS cost of a background job's file mutations: directory
+        lock (OCFS2: cross-node serialization) / block locks (GFS2) plus
+        the writing NODE's data journal. Peer offload drags lock/coherence
+        traffic across the (data-congested) fabric → higher DLM latency
+        (paper: OCFS2/GFS2 prefer the storage node)."""
+        if sysname == "ocfs2":
+            if remote and two_writers:
+                # a REMOTE writer holds the directory lock for its whole
+                # write phase — serializing every other dir mutation (the
+                # paper's "directory locks serialize offloaded tasks")
+                hold_s = nbytes / (280e6 if via_peer else 500e6)
+                yield ("use", dirlock, hold_s / spec.dlm_rtt)
+            else:
+                yield ("use", dirlock, 6.0 if two_writers else 1.0)
+        elif sysname == "gfs2":
+            per_mb = 1.3 if via_peer else 0.5
+            yield from cl.dlm_msgs(2.0 + nbytes / MB * per_mb)
+        if j_per_mb:
+            res = journal_s if remote else journals[i]
+            yield ("use", res, nbytes / MB * j_per_mb)
+
+    def _one_use(res, secs):
+        yield ("use", res, secs)
+
+    def merge_work(res, nbytes, *, cached=False, io_bw=None):
+        """Merge on `res`, split over subcompactions (correct TOTAL work,
+        1/P latency — RocksDB subcompaction parallelism), plus the job's
+        read+write I/O time on its access path (fabric vs near-data)."""
+        secs = nbytes / params.merge_rate * (0.75 if cached else 1.0)
+        P = max(1, params.subcompactions)
+        hs = []
+        for _ in range(P):
+            h = yield ("spawn", _one_use(res, secs / P))
+            hs.append(h)
+        for h in hs:
+            yield ("join", h)
+        if io_bw:
+            # read+write I/O, half-overlapped with the merge compute
+            yield ("delay", nbytes / io_bw)
+
+    def flush_job(i, after=None):
+        if after is not None:
+            yield ("join", after)
+        mt = params.memtable_bytes
+        offloaded = params.offload_flush and sysname != "ext4" \
+            and policy.admit(f"init{i}")
+        if offloaded:
+            yield from cl.rpc(i, 4096)
+            state["inflight_storage_cores"] += 2
+            if params.log_recycling:
+                off_bytes = mt / rec * 8
+                yield from cl.net_transfer(i, off_bytes)  # offsets only
+                yield ("use", cl.nvme_r, mt)  # WAL read, near-data
+            else:
+                yield from cl.net_transfer(i, mt)
+                state["net_bytes"] += mt
+            yield from job_locks(i, mt, remote=True)
+            yield from merge_work(cl.cpu_s, mt, io_bw=params.io_bw_near)
+            yield ("use", cl.nvme_w, mt)
+            state["inflight_storage_cores"] -= 2
+            policy.complete(f"init{i}")
+        else:
+            yield from merge_work(cl.cpu_i[i], mt, io_bw=params.io_bw_fabric)
+            yield from job_locks(i, mt, remote=False)
+            yield from cl.storage_write(i, mt)
+            state["net_bytes"] += mt
+
+    def compact_job(i, level, after=None):
+        if after is not None:
+            yield ("join", after)  # same-level jobs serialize (RocksDB)
+        size = params.memtable_bytes * params.l0_trigger * 1.5 \
+            * (params.size_growth ** level)
+        offloaded = level < params.offload_levels and sysname != "ext4" \
+            and policy.admit(f"init{i}")
+        if offloaded and not params.peer:
+            yield from cl.rpc(i, 4096)
+            state["inflight_storage_cores"] += params.subcompactions
+            yield ("use", cl.nvme_r, size)  # near-data
+            yield from job_locks(i, size, remote=True)
+            yield from merge_work(cl.cpu_s, size, cached=params.offload_cache, io_bw=params.io_bw_near)
+            yield ("use", cl.nvme_w, size)
+            state["inflight_storage_cores"] -= params.subcompactions
+            policy.complete(f"init{i}")
+        elif offloaded and params.peer:
+            yield from cl.rpc(i, 4096)
+            yield ("use", cl.nvme_r, size)
+            yield ("use", cl.net_i[peer_id], size)  # storage→peer
+            yield from job_locks(i, size, remote=True, via_peer=True)
+            yield from merge_work(cl.cpu_i[peer_id], size, cached=params.offload_cache, io_bw=params.io_bw_peer)
+            yield ("use", cl.net_i[peer_id], size)  # peer→storage
+            yield ("use", cl.nvme_w, size)
+            state["net_bytes"] += 2 * size
+            policy.complete(f"init{i}")
+        else:
+            yield from cl.storage_read(i, size)
+            yield from job_locks(i, size, remote=False)
+            yield from merge_work(cl.cpu_i[i], size, io_bw=params.io_bw_fabric)
+            yield from cl.storage_write(i, size)
+            state["net_bytes"] += 2 * size
+
+    fill = [0.0] * instances
+    flush_count = [0] * instances
+    level_counters = [[0] * (params.levels + 1) for _ in range(instances)]
+    last_job = [[None] * (params.levels + 1) for _ in range(instances)]
+
+    def client(i, sid, n_ops):
+        ops_left = n_ops
+        while ops_left > 0:
+            n = min(params.batch, ops_left)
+            ops_left -= n
+            t0 = sim.now
+            nw = round(n * params.write_ratio)
+            nr = n - nw
+            yield from cl.cpu_work(i, n * spec.kv_cpu_per_op)
+            if j_per_op:
+                yield ("use", journals[i], n * j_per_op)
+            if sysname == "ocfs2" and two_writers:
+                yield ("use", dirlock, n * 0.01)  # fg share of dir-lock churn
+            if nw:
+                if params.sync_wal:
+                    yield ("delay", nw * spec.rpc_rtt)
+                if j_per_mb:
+                    yield ("use", journals[i], nw * rec / MB * j_per_mb)
+                yield from cl.storage_write(i, nw * rec)
+                state["net_bytes"] += nw * rec
+                fill[i] += nw * rec * 1.05
+            if nr:
+                misses = int(nr * (1 - params.read_hit_ratio))
+                if misses:
+                    rb = misses * params.value_bytes * params.read_amp
+                    yield ("delay", misses * params.miss_latency / 8)
+                    yield from cl.storage_read(i, rb)
+                    state["net_bytes"] += rb
+            # flush / compaction triggers (instance-shared accounting; DES
+            # events don't interleave within a step → no races)
+            counters = level_counters[i]
+            while fill[i] >= params.memtable_bytes:
+                fill[i] -= params.memtable_bytes
+                hf = sim.spawn(flush_job(i, after=last_job[i][0]))
+                last_job[i][0] = hf
+                state["backlog"][i].append(hf)
+                flush_count[i] += 1
+                if flush_count[i] % params.l0_trigger == 0:
+                    counters[0] += 1
+                    h0 = sim.spawn(compact_job(i, 0, after=last_job[i][0]))
+                    last_job[i][0] = h0
+                    state["backlog"][i].append(h0)
+                    for lvl in range(1, params.levels):
+                        if counters[lvl - 1] >= params.job_ratio:
+                            counters[lvl - 1] = 0
+                            counters[lvl] += 1
+                            hl = sim.spawn(
+                                compact_job(i, lvl, after=last_job[i][lvl])
+                            )
+                            last_job[i][lvl] = hl
+                            state["backlog"][i].append(hl)
+            state["backlog"][i] = [h for h in state["backlog"][i] if not h.done]
+            if len(state["backlog"][i]) > params.stall_backlog:
+                ts = sim.now
+                yield ("join", state["backlog"][i][0])
+                state["stall"][i] += sim.now - ts
+            state["latencies"].append((sim.now - t0) / n)
+
+    procs = params.client_procs
+    for i in range(instances):
+        policy.register(f"init{i}")
+        per = params.n_ops // procs
+        # stream 0 carries the whole write volume for trigger bookkeeping
+        for sid in range(procs):
+            sim.spawn(client(i, sid, per))
+    makespan = sim.run()
+    total = params.n_ops // procs * procs * instances
+    return KVResult(
+        throughput=total / makespan if makespan else 0.0,
+        latencies=state["latencies"],
+        storage_cpu_util=cl.cpu_s.utilization(makespan),
+        initiator_cpu_util=cl.cpu_i[0].utilization(makespan),
+        net_bytes=state["net_bytes"],
+        stall_time=sum(state["stall"]),
+        makespan=makespan,
+    )

@@ -1,0 +1,2 @@
+from repro.train.optim import adafactor, adamw, sgd_momentum  # noqa: F401
+from repro.train.step import make_train_step, make_eval_step  # noqa: F401

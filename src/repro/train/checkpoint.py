@@ -1,0 +1,139 @@
+"""Checkpointing through OffloadDB (the paper's technique as the trainer's
+fault-tolerance substrate).
+
+Model/optimizer/data-iterator state is written as KV pairs into an LSM on
+the disaggregated volume: WAL-append (cheap, sequential) on the training
+host; sorting/compaction of checkpoint generations happens on the STORAGE
+node via OffloadFS (flush + compaction offload) — the training host's CPU
+and NIC stay on the fast path (Log Recycling ships each byte once).
+
+Incremental: leaves whose content hash is unchanged since the previous
+generation are not re-written (delta checkpointing); restore walks the
+latest pointer. Old generations are deleted → LSM compaction reclaims them
+(offloaded, off the host).
+
+Topology-independence: leaves are stored UNSHARDED (gathered), so a restart
+may use a different mesh/data-parallel width (elastic re-scale).
+"""
+from __future__ import annotations
+
+import hashlib
+import io as _io
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.lsm.db import OffloadDB
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _leaf_bytes(x) -> bytes:
+    buf = _io.BytesIO()
+    np.save(buf, np.asarray(x), allow_pickle=False)
+    return buf.getvalue()
+
+
+CHUNK = 200_000  # bytes per KV value: large leaves split across records
+# (must stay below DBConfig.sstable_target_bytes so tables can always split)
+
+
+class CheckpointManager:
+    def __init__(self, db: OffloadDB, *, keep: int = 2):
+        self.db = db
+        self.keep = keep
+        self._hashes: Dict[str, Tuple[int, str]] = {}  # leaf -> (gen, sha)
+
+    def _put_blob(self, name: str, blob: bytes) -> int:
+        n = max(1, -(-len(blob) // CHUNK))
+        for ci in range(n):
+            self.db.put(f"{name}/{ci:05d}".encode(),
+                        blob[ci * CHUNK : (ci + 1) * CHUNK])
+        return n
+
+    def _get_blob(self, name: str, n_chunks: int) -> bytes:
+        return b"".join(
+            self.db.get(f"{name}/{ci:05d}".encode()) for ci in range(n_chunks)
+        )
+
+    def save(self, state: Any, step: int) -> Dict[str, int]:
+        """Write a checkpoint generation; returns {written, skipped}."""
+        flat = jax.tree_util.tree_flatten_with_path(state)[0]
+        written = skipped = 0
+        index = {}
+        for path, leaf in flat:
+            key = _path_str(path)
+            blob = _leaf_bytes(leaf)
+            sha = hashlib.sha1(blob).hexdigest()
+            prev = self._hashes.get(key)
+            if prev is not None and prev[1] == sha:
+                index[key] = prev[0]  # unchanged: [old gen, n_chunks]
+                skipped += 1
+                continue
+            n = self._put_blob(f"ckpt/{step:012d}/{key}", blob)
+            self._hashes[key] = ([step, n], sha)
+            index[key] = [step, n]
+            written += 1
+        self.db.put(
+            f"ckptidx/{step:012d}".encode(),
+            json.dumps(index).encode(),
+        )
+        self.db.put(b"ckpt_latest", str(step).encode())
+        self._gc(step)
+        return {"written": written, "skipped": skipped}
+
+    def _gc(self, current: int) -> None:
+        steps = sorted(
+            int(k.decode().split("/")[1])
+            for k, _ in self.db.scan(b"ckptidx/", 1 << 20)
+            if k.startswith(b"ckptidx/")
+        )
+        live = set(steps[-self.keep :]) | {current}
+        # leaves referenced by live indexes survive
+        referenced = set()
+        for s in live:
+            raw = self.db.get(f"ckptidx/{s:012d}".encode())
+            if raw:
+                for key, (gen, n) in json.loads(raw.decode()).items():
+                    referenced.add(f"ckpt/{gen:012d}/{key}")
+        for s in steps:
+            if s in live:
+                continue
+            raw = self.db.get(f"ckptidx/{s:012d}".encode())
+            if not raw:
+                continue
+            for key, (gen, n) in json.loads(raw.decode()).items():
+                name = f"ckpt/{gen:012d}/{key}"
+                if name not in referenced:
+                    for ci in range(n):
+                        self.db.delete(f"{name}/{ci:05d}".encode())
+            self.db.delete(f"ckptidx/{s:012d}".encode())
+
+    def latest_step(self) -> Optional[int]:
+        raw = self.db.get(b"ckpt_latest")
+        return int(raw.decode()) if raw else None
+
+    def restore(self, like: Any, step: Optional[int] = None) -> Any:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint")
+        raw = self.db.get(f"ckptidx/{step:012d}".encode())
+        index = json.loads(raw.decode())
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in flat:
+            key = _path_str(path)
+            gen, n = index[key]
+            blob = self._get_blob(f"ckpt/{gen:012d}/{key}", n)
+            arr = np.load(_io.BytesIO(blob), allow_pickle=False)
+            if hasattr(leaf, "dtype") and hasattr(leaf, "shape"):
+                leaves.append(
+                    jax.numpy.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape)
+                )
+            else:  # non-array leaf (e.g. a JSON string of iterator state)
+                leaves.append(arr.item() if arr.shape == () else arr)
+        return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])

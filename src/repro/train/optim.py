@@ -1,0 +1,231 @@
+"""Optimizers built from scratch (no optax): AdamW, Adafactor, SGD+momentum.
+
+Each optimizer is a pair of pure functions packaged in :class:`Optimizer`:
+``init(params) → state`` and ``update(grads, state, params, step) →
+(new_params, new_state)``. State trees mirror params leaf-for-leaf
+(Adafactor hangs a small dict {vr,vc}/{v} under each param leaf).
+
+ZeRO-1: ``zero1_state_specs`` extends each state leaf's PartitionSpec with
+the data-parallel mesh axes on the first unsharded divisible dim, so the
+optimizer update runs on 1/dp of each tensor (XLA inserts reduce-scatter on
+grads + all-gather on the updated params).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    factored: bool = False
+
+
+def _map_leaves(fn, params, *rest):
+    """Map fn over param leaves; `rest` trees may hang subtrees under each
+    param-leaf position (e.g. adafactor state). fn returns a tuple; returns
+    one tree per tuple element."""
+    flat_p, treedef = jax.tree.flatten(params)
+    flats = [treedef.flatten_up_to(r) for r in rest]
+    outs = [fn(p, *(f[i] for f in flats)) for i, p in enumerate(flat_p)]
+    return [treedef.unflatten(list(u)) for u in zip(*outs)]
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype or p.dtype), params)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+# -------------------------------------------------------------------- AdamW
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None,
+) -> Optimizer:
+    def init(params):
+        return {
+            "m": _tree_zeros_like(params, jnp.float32),
+            "v": _tree_zeros_like(params, jnp.float32),
+        }
+
+    def update(grads, state, params, step):
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        lr_t = lr * (schedule(step) if schedule else 1.0)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m1 = b1 * m + (1 - b1) * g
+            v1 = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m1 / bc1
+            vhat = v1 / bc2
+            step_ = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype), m1, v1
+
+        new_params, new_m, new_v = _map_leaves(upd, params, grads, state["m"], state["v"])
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------- Adafactor
+def adafactor(
+    lr: float = 1e-2,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None,
+) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern) — the choice for
+    the 314B/398B configs where AdamW's 8 bytes/param state would not fit."""
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(leaf, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr * (schedule(step) if schedule else 1.0)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                rfac = jax.lax.rsqrt(vr / jnp.maximum(vr.mean(-1, keepdims=True), eps))
+                u = g * rfac[..., None] * jax.lax.rsqrt(vc)[..., None, :]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr_t * (u + weight_decay * pf)
+            return pf.astype(p.dtype), ns
+
+        new_params, new_state = _map_leaves(upd, params, grads, state)
+        return new_params, new_state
+
+    return Optimizer("adafactor", init, update, factored=True)
+
+
+# ---------------------------------------------------------- SGD + momentum
+def sgd_momentum(lr: float = 0.1, momentum: float = 0.9, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mom": _tree_zeros_like(params, jnp.float32)}
+
+    def update(grads, state, params, step):
+        scale = 1.0
+        if grad_clip:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+        def upd(p, g, m):
+            m1 = momentum * m + g.astype(jnp.float32) * scale
+            return (p.astype(jnp.float32) - lr * m1).astype(p.dtype), m1
+
+        new_params, new_m = _map_leaves(upd, params, grads, state["mom"])
+        return new_params, {"mom": new_m}
+
+    return Optimizer("sgd", init, update)
+
+
+# ----------------------------------------------------------- lr schedules
+def cosine_schedule(warmup: int, total: int, min_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+
+    return fn
+
+
+def for_config(cfg, total_steps: int = 10000) -> Optimizer:
+    """Per-arch default: Adafactor for the ≥300B MoEs (state bytes), AdamW
+    elsewhere."""
+    sched = cosine_schedule(min(200, total_steps // 10), total_steps)
+    if cfg.name in ("grok-1-314b", "jamba-1.5-large-398b"):
+        return adafactor(lr=1e-2, schedule=sched)
+    return adamw(lr=3e-4, schedule=sched)
+
+
+# ------------------------------------------------------------------ ZeRO-1
+def zero1_extend_spec(spec: P, shape, mesh, dp_axes) -> P:
+    """Extend a state leaf's PartitionSpec with dp axes on the first
+    unsharded dim divisible by the dp size."""
+    dp = tuple(a for a in dp_axes if a in mesh.shape)
+    if not dp:
+        return spec
+    dp_size = math.prod(mesh.shape[a] for a in dp)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, e in enumerate(entries):
+        if e is None and shape[i] % dp_size == 0 and shape[i] > 0:
+            entries[i] = dp if len(dp) > 1 else dp[0]
+            break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def zero1_state_specs(opt: Optimizer, param_spec_tree, abstract_params, mesh, dp_axes):
+    """PartitionSpec tree for optimizer state under ZeRO-1."""
+    ex = lambda sp, shp: zero1_extend_spec(sp, shp, mesh, dp_axes)
+
+    def one(sp, ab):
+        return ex(sp, ab.shape)
+
+    flat_sp, treedef = jax.tree.flatten(
+        param_spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    flat_ab = treedef.flatten_up_to(abstract_params)
+
+    if opt.name in ("adamw", "sgd"):
+        leaves = [one(sp, ab) for sp, ab in zip(flat_sp, flat_ab)]
+        t = treedef.unflatten(leaves)
+        return {"m": t, "v": t} if opt.name == "adamw" else {"mom": t}
+    if opt.name == "adafactor":
+
+        def leaf(sp, ab):
+            if ab.ndim >= 2:
+                entries = list(sp) + [None] * (ab.ndim - len(sp))
+                vr = P(*entries[:-1])
+                vc = P(*(entries[:-2] + entries[-1:]))
+                return {"vr": vr, "vc": vc}
+            return {"v": ex(sp, ab.shape)}
+
+        return treedef.unflatten([leaf(sp, ab) for sp, ab in zip(flat_sp, flat_ab)])
+    raise ValueError(opt.name)

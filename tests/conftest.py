@@ -1,0 +1,5 @@
+import os
+import sys
+
+# tests see ONE CPU device (the dry-run alone forces 512 placeholder devices)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

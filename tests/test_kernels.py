@@ -1,0 +1,97 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) ≡ ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.preprocess import resize_operator
+
+
+@pytest.mark.parametrize("S,KV,G,D,blk", [
+    (128, 1, 1, 64, 64),
+    (256, 2, 4, 64, 128),
+    (256, 4, 1, 128, 64),
+    (512, 2, 2, 32, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(S, KV, G, D, blk, dtype, causal):
+    B = 2
+    q = jax.random.normal(jax.random.key(0), (B, S, KV, G, D), dtype)
+    k = jax.random.normal(jax.random.key(1), (B, S, KV, D), dtype)
+    v = jax.random.normal(jax.random.key(2), (B, S, KV, D), dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, block_q=blk, block_kv=blk)
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * KV * G, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
+    oref = ref.flash_attention_ref(qf, kf, vf, causal=causal)
+    oref = oref.reshape(B, KV, G, S, D).transpose(0, 3, 1, 2, 4)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(oref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_softcap():
+    B, S, KV, G, D = 1, 128, 2, 2, 64
+    q = jax.random.normal(jax.random.key(0), (B, S, KV, G, D))
+    k = jax.random.normal(jax.random.key(1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.key(2), (B, S, KV, D))
+    o = ops.flash_attention(q, k, v, causal=True, softcap=30.0, block_q=64, block_kv=64)
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(-1, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(-1, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(-1, S, D)
+    oref = ref.flash_attention_ref(qf, kf, vf, causal=True, softcap=30.0)
+    oref = oref.reshape(B, KV, G, S, D).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("n", [64, 256, 1024])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_bitonic_merge_sweep(n, dtype):
+    rng = np.random.RandomState(n)
+    a = np.sort(rng.randint(0, 1 << 20, n).astype(dtype))
+    b = np.sort(rng.randint(0, 1 << 20, n).astype(dtype))
+    av = np.arange(n, dtype=np.int32)
+    bv = np.arange(n, 2 * n, dtype=np.int32)
+    mk, mv = ops.merge_sorted(jnp.asarray(a), jnp.asarray(av),
+                              jnp.asarray(b), jnp.asarray(bv))
+    rk, _ = ref.bitonic_merge_ref(a, av, b, bv)
+    np.testing.assert_array_equal(np.asarray(mk), rk)
+    # payloads travel with their keys
+    key_of = {int(v): k for k, v in
+              list(zip(a, av)) + list(zip(b, bv))}
+    for k, v in zip(np.asarray(mk), np.asarray(mv)):
+        assert key_of[int(v)] == k
+
+
+@pytest.mark.parametrize("H,W,out,flip", [
+    (96, 80, 64, False), (128, 128, 96, True), (61, 77, 32, True),
+])
+def test_preprocess_kernel_sweep(H, W, out, flip):
+    rng = np.random.RandomState(0)
+    img = (rng.rand(3, H, W) * 255).astype(np.float32)
+    o = ops.preprocess_image(jnp.asarray(img), out_size=out, flip=flip)
+    ry = resize_operator(H, out)
+    rxt = resize_operator(W, out, flip=flip).T
+    mean = (np.array([0.485, 0.456, 0.406], np.float32) * 255).reshape(3, 1)
+    std = (np.array([0.229, 0.224, 0.225], np.float32) * 255).reshape(3, 1)
+    oref = ref.preprocess_plane_ref(img, ry, rxt, mean, std)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref), atol=1e-4, rtol=1e-4)
+
+
+def test_preprocess_matmul_matches_gather_bilinear():
+    """The MXU (matmul) resize formulation ≡ the numpy gather bilinear used
+    by the storage-node preprocessing path."""
+    from repro.data.preprocess import bilinear_resize
+
+    rng = np.random.RandomState(3)
+    img = (rng.rand(40, 56, 3) * 255).astype(np.float32)
+    out = 24
+    ref_np = bilinear_resize(img, out, out)
+    ry = resize_operator(40, out)
+    rx = resize_operator(56, out)
+    got = np.einsum("oh,hwc->owc", ry, img)
+    got = np.einsum("owc,pw->opc", got, rx)
+    np.testing.assert_allclose(got, ref_np, atol=1e-3, rtol=1e-4)

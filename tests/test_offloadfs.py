@@ -1,0 +1,132 @@
+"""OffloadFS core: extents, leases, authorization, coherence, mount."""
+import pytest
+
+from repro.core import (
+    BLOCK_SIZE, AcceptAll, BlockDevice, Extent, ExtentManager, OffloadFS,
+    RpcFabric,
+)
+from repro.core.engine import OffloadEngine
+from repro.core.fs import LeaseViolation
+from repro.core.offloader import TaskOffloader, serve_engine
+
+
+def make_fs(blocks=4096):
+    dev = BlockDevice(num_blocks=blocks)
+    return dev, OffloadFS(dev, node="init0")
+
+
+def test_create_write_read_roundtrip():
+    _, fs = make_fs()
+    fs.create("/a")
+    data = bytes(range(256)) * 33  # unaligned length
+    fs.write("/a", data, 0)
+    assert fs.read("/a") == data
+    assert fs.read("/a", 100, 50) == data[100:150]
+    fs.truncate("/a", 100)
+    assert fs.read("/a") == data[:100]
+
+
+def test_delete_frees_blocks():
+    _, fs = make_fs()
+    free0 = fs.extmgr.free_blocks
+    fs.create("/a")
+    fs.write("/a", b"x" * (BLOCK_SIZE * 10), 0)
+    assert fs.extmgr.free_blocks == free0 - 10
+    fs.delete("/a")
+    assert fs.extmgr.free_blocks == free0
+
+
+def test_lease_blocks_initiator_writes():
+    _, fs = make_fs()
+    fs.create("/a")
+    fs.write("/a", b"y" * BLOCK_SIZE * 4, 0)
+    ex = fs.stat("/a").extents
+    lease = fs.grant_lease([], ex)
+    with pytest.raises(LeaseViolation):
+        fs.write("/a", b"z" * BLOCK_SIZE, 0)
+    with pytest.raises(LeaseViolation):
+        fs.delete("/a")
+    fs.release_lease(lease)
+    fs.write("/a", b"z" * BLOCK_SIZE, 0)  # ok now
+
+
+def test_target_cannot_touch_unauthorized_blocks():
+    dev, fs = make_fs()
+    fs.create("/a")
+    fs.write("/a", b"a" * BLOCK_SIZE * 2, 0)
+    fs.create("/secret")
+    fs.write("/secret", b"s" * BLOCK_SIZE, 0)
+    ex = fs.stat("/a").extents
+    sx = fs.stat("/secret").extents
+    lease = fs.grant_lease(ex, [])
+    eng = OffloadEngine(fs, node="storage0")
+
+    def sneaky(io):
+        return io.offload_read(sx[0].block, 1)
+
+    eng.register_stub("sneaky", sneaky)
+    with pytest.raises(LeaseViolation):
+        eng.run_task("sneaky", lease)
+
+    def sneaky_write(io):
+        io.offload_write(ex[0].block, b"w" * BLOCK_SIZE)  # read-only lease
+
+    eng.register_stub("sneaky_write", sneaky_write)
+    with pytest.raises(LeaseViolation):
+        eng.run_task("sneaky_write", lease)
+
+
+def test_mtime_coherence_bypasses_stale_cache():
+    dev, fs = make_fs()
+    fs.create("/a")
+    fs.write("/a", b"1" * BLOCK_SIZE, 0)
+    eng = OffloadEngine(fs, node="storage0", cache_blocks=64)
+    eng.register_stub("read", lambda io, blk: io.offload_read(blk, 1))
+    ex = fs.stat("/a").extents
+
+    lease = fs.grant_lease(ex, [])
+    t1 = fs.stat("/a").mtime
+    r1 = eng.run_task("read", lease, ex[0].block, mtime=t1)
+    fs.release_lease(lease)
+    assert r1[:1] == b"1"
+    # initiator writes directly → cached block is stale
+    fs.write("/a", b"2" * BLOCK_SIZE, 0)
+    lease = fs.grant_lease(ex, [])
+    t2 = fs.stat("/a").mtime
+    r2 = eng.run_task("read", lease, ex[0].block, mtime=t2)
+    assert r2[:1] == b"2"  # coherence: bypassed the stale entry
+    assert eng.cache.stats.bypasses >= 1
+
+
+def test_superblock_mount_roundtrip():
+    dev, fs = make_fs()
+    fs.create("/x/a")
+    fs.write("/x/a", b"q" * 5000, 0)
+    fs.create("/x/b")
+    fs.flush_metadata()
+    fs2 = OffloadFS.mount(dev, node="init0")
+    assert fs2.read("/x/a") == b"q" * 5000
+    assert fs2.exists("/x/b")
+    # allocator rebuilt: new allocations don't collide with existing data
+    fs2.create("/x/c")
+    fs2.write("/x/c", b"n" * BLOCK_SIZE * 8, 0)
+    assert fs2.read("/x/a") == b"q" * 5000
+
+
+def test_rejected_offload_runs_locally():
+    from repro.core.admission import RejectAll
+
+    dev, fs = make_fs()
+    fabric = RpcFabric()
+    eng = OffloadEngine(fs, node="storage0")
+    serve_engine(eng, fabric, RejectAll())
+    off = TaskOffloader(fs, fabric, node="init0")
+    fs.create("/a")
+    fs.write("/a", b"z" * BLOCK_SIZE, 0)
+    ex = fs.stat("/a").extents
+    stub = lambda io, blk: io.offload_read(blk, 1)[:1]
+    off.register_local_stub("peek", stub)
+    eng.register_stub("peek", stub)
+    res, where = off.submit("peek", ex[0].block, read_extents=ex)
+    assert res == b"z" and where == "init0"
+    assert off.stats.rejected == 1 and off.stats.ran_local == 1
