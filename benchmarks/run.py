@@ -1,6 +1,7 @@
 """Benchmark harness: one module per paper figure (+ the roofline report).
 Prints ``name,value,derived`` CSV rows; claim checks appear as
 ``claim/<name>,PASS|FAIL``. Usage: PYTHONPATH=src python -m benchmarks.run
+[--smoke]  (--smoke runs the fast subset only — the CI job).
 """
 import importlib
 import sys
@@ -16,14 +17,23 @@ MODULES = [
     "benchmarks.fig11_latency_throughput",
     "benchmarks.fig12_cache_timeline",
     "benchmarks.fig13_cache_pollution",
+    "benchmarks.fig14_sharded_plane",
+    "benchmarks.roofline_report",
+]
+
+SMOKE_MODULES = [
+    "benchmarks.fig2_fs_overhead",
+    "benchmarks.fig14_sharded_plane",
     "benchmarks.roofline_report",
 ]
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    modules = SMOKE_MODULES if "--smoke" in argv else MODULES
     t0 = time.time()
     failures = 0
-    for mod in MODULES:
+    for mod in modules:
         print(f"# === {mod} ===", flush=True)
         t = time.time()
         try:

@@ -23,6 +23,17 @@ from repro.core.fs import Lease, OffloadFS
 
 
 @dataclass
+class QueueStats:
+    """Bounded work-queue accounting (multi-initiator backpressure)."""
+
+    capacity: int = 0
+    inflight: int = 0
+    inflight_peak: int = 0
+    stalls: int = 0  # submissions that had to wait for a slot
+    completed: int = 0
+
+
+@dataclass
 class CacheStats:
     hits: int = 0
     misses: int = 0
@@ -106,7 +117,8 @@ class OffloadEngine:
     """Target-side skeleton: executes offloaded stubs with offload_read/write."""
 
     def __init__(self, fs: OffloadFS, *, node: str = "storage0",
-                 cache_blocks: int = 4096, enable_cache: bool = True):
+                 cache_blocks: int = 4096, enable_cache: bool = True,
+                 max_inflight: int = 16):
         self.fs = fs
         self.node = node
         self.cache = OffloadCache(cache_blocks)
@@ -114,20 +126,49 @@ class OffloadEngine:
         self._stubs: Dict[str, Callable] = {}
         self.busy_ns = 0  # accumulated simulated work units (DES hook)
         self.tasks_run = 0
+        # bounded work queue: with many initiators submitting concurrently,
+        # admission caps what the policy lets in, and this caps what the
+        # engine lets RUN — excess submissions block (backpressure) so the
+        # pinned working set stays bounded by max_inflight leases
+        self._q_lock = threading.Lock()
+        self._q_cond = threading.Condition(self._q_lock)
+        self.queue = QueueStats(capacity=max(1, max_inflight))
 
     # ------------------------------------------------------------- stubs
     def register_stub(self, name: str, fn: Callable) -> None:
         """fn(engine_io, *args) — engine_io provides offload_read/write."""
         self._stubs[name] = fn
 
+    # -------------------------------------------------------- work queue
+    def _acquire_slot(self) -> None:
+        with self._q_cond:
+            if self.queue.inflight >= self.queue.capacity:
+                self.queue.stalls += 1
+                self._q_cond.wait_for(
+                    lambda: self.queue.inflight < self.queue.capacity
+                )
+            self.queue.inflight += 1
+            self.queue.inflight_peak = max(
+                self.queue.inflight_peak, self.queue.inflight
+            )
+
+    def _release_slot(self) -> None:
+        with self._q_cond:
+            self.queue.inflight -= 1
+            self.queue.completed += 1
+            self._q_cond.notify()
+
     def run_task(self, name: str, lease: Lease, *args,
                  mtime: float = 0.0, bypass_cache: bool = False, **kwargs):
+        self._acquire_slot()
         io = EngineIO(self, lease, mtime=mtime, bypass_cache=bypass_cache)
         try:
             result = self._stubs[name](io, *args, **kwargs)
         finally:
             self.cache.unpin_all(io.pinned)
-        self.tasks_run += 1
+            self._release_slot()
+        with self._q_lock:
+            self.tasks_run += 1
         return result
 
 

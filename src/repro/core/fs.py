@@ -253,6 +253,14 @@ class OffloadFS:
             length = max(0, min(length, inode.size - offset))
             if length == 0:
                 return b""
+            if self._leased_blocks:
+                # quiesce discipline: while a task holds a WRITE lease the
+                # initiator must not even read those blocks (the target may
+                # be mid-write; there is no DLM to order the access)
+                self._check_not_leased(
+                    b for blk, n in self._extent_blocks(inode, offset, length)
+                    for b in range(blk, blk + n)
+                )
             first_blk = offset // BLOCK_SIZE
             skip = offset - first_blk * BLOCK_SIZE
             out = []

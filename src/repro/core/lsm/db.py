@@ -223,7 +223,9 @@ class OffloadDB:
         self._new_wal()
         self.stats["flushes"] += 1
         if not (self.cfg.log_recycling and self.cfg.l0_cache):
-            self._materialize_l0(self.imm.pop(0))
+            # pop only once the flush committed (failure keeps it readable)
+            self._materialize_l0(self.imm[0])
+            self.imm.pop(0)
         self.maybe_compact()
 
     def _file_runs(self, path: str) -> Tuple[List[Tuple[int, int]], int]:
@@ -250,9 +252,13 @@ class OffloadDB:
             })
         return outs
 
-    def _submit(self, task: str, *args, read_paths=(), write_outputs=(),
-                level: int = 0, **kw):
-        """Offload via the Task Offloader (or run locally when disabled)."""
+    def _offload_ok(self, task: str, level: int) -> bool:
+        return self.off is not None and (
+            (task == "compact" and level < self.cfg.offload_levels)
+            or (task == "log_recycle" and self.cfg.offload_flush)
+        )
+
+    def _lease_args(self, read_paths, write_outputs):
         read_extents = []
         mtime = 0.0
         for p in read_paths:
@@ -260,12 +266,16 @@ class OffloadDB:
             read_extents.extend(ino.extents)
             mtime = max(mtime, ino.mtime)
         write_extents = [e for o in write_outputs for e in o["extents"]]
-        target = self.cfg.peer_target
-        offload_ok = self.off is not None and (
-            (task == "compact" and level < self.cfg.offload_levels)
-            or (task == "log_recycle" and self.cfg.offload_flush)
+        return read_extents, write_extents, mtime
+
+    def _submit(self, task: str, *args, read_paths=(), write_outputs=(),
+                level: int = 0, **kw):
+        """Offload via the Task Offloader (or run locally when disabled)."""
+        read_extents, write_extents, mtime = self._lease_args(
+            read_paths, write_outputs
         )
-        if offload_ok:
+        target = self.cfg.peer_target
+        if self._offload_ok(task, level):
             result, where = self.off.submit(
                 task, *args,
                 read_extents=read_extents, write_extents=write_extents,
@@ -323,36 +333,91 @@ class OffloadDB:
             for t in new_ids:
                 self._reader(t)
 
-    def _materialize_l0(self, entry) -> None:
-        """Flush one immutable memtable to a physical L0 SSTable."""
+    def _prep_flush_job(self, entry) -> dict:
+        """Build the submission for flushing one immutable memtable."""
         mem: MemTable = entry["mem"]
         total = mem.bytes + 24 * len(mem) + 4096
         outs = self._alloc_outputs(total)
-        if self.cfg.log_recycling:
-            runs, size = self._file_runs(entry["wal"].path)
-            wal_arg = {"runs": runs, "size": size, "offsets": mem.sorted_offsets()}
-            self.stats["flush_rpc_payload"] += 8 * len(mem)  # offsets only
-            results, _ = self._submit(
-                "log_recycle", wal_arg,
-                [{"runs": o["runs"], "cap": o["cap"]} for o in outs],
-                read_paths=[entry["wal"].path], write_outputs=outs,
-            )
-        else:
-            # vanilla path: the initiator serializes and writes the table
-            # itself (each KV pair crosses the fabric a second time)
-            data = build_bytes([(k, v) for k, v, _ in mem.items()])
-            self.stats["flush_rpc_payload"] += len(data)
-            o = outs[0]
-            self.fs.write(o["path"], data, 0)
-            results = [{"idx": 0, "used": len(data), "n": len(mem),
-                        "min": next(mem.items())[0], "max": mem.key_range()[1]}]
-        new_ids = self._commit_outputs(outs, results, 0)
+        runs, size = self._file_runs(entry["wal"].path)
+        wal_arg = {"runs": runs, "size": size, "offsets": mem.sorted_offsets()}
+        self.stats["flush_rpc_payload"] += 8 * len(mem)  # offsets only
+        return {
+            "kind": "flush", "task": "log_recycle", "level": 0,
+            "args": (wal_arg, [{"runs": o["runs"], "cap": o["cap"]} for o in outs]),
+            "read_paths": [entry["wal"].path], "outs": outs, "entry": entry,
+        }
+
+    def _commit_flush_job(self, job) -> None:
+        entry = job["entry"]
+        new_ids = self._commit_outputs(job["outs"], job["results"], 0)
         self.levels[0].extend(new_ids)  # newest last
-        if not self.cfg.log_recycling:
-            self._pollute_after_local(self.fs.node, new_ids)
         self.manifest.append({"kind": "droplog", "gen": entry["gen"]})
         self.manifest.commit()
         self.fs.delete(entry["wal"].path)
+
+    def _materialize_l0(self, entry) -> None:
+        """Flush one immutable memtable to a physical L0 SSTable."""
+        if self.cfg.log_recycling:
+            job = self._prep_flush_job(entry)
+            job["results"], _ = self._submit(
+                job["task"], *job["args"],
+                read_paths=job["read_paths"], write_outputs=job["outs"],
+            )
+            self._commit_flush_job(job)
+            return
+        # vanilla path: the initiator serializes and writes the table
+        # itself (each KV pair crosses the fabric a second time)
+        mem: MemTable = entry["mem"]
+        total = mem.bytes + 24 * len(mem) + 4096
+        outs = self._alloc_outputs(total)
+        data = build_bytes([(k, v) for k, v, _ in mem.items()])
+        self.stats["flush_rpc_payload"] += len(data)
+        o = outs[0]
+        self.fs.write(o["path"], data, 0)
+        results = [{"idx": 0, "used": len(data), "n": len(mem),
+                    "min": next(mem.items())[0], "max": mem.key_range()[1]}]
+        new_ids = self._commit_outputs(outs, results, 0)
+        self.levels[0].extend(new_ids)  # newest last
+        self._pollute_after_local(self.fs.node, new_ids)
+        self.manifest.append({"kind": "droplog", "gen": entry["gen"]})
+        self.manifest.commit()
+        self.fs.delete(entry["wal"].path)
+
+    def _materialize_l0_batch(self, entries) -> None:
+        """Flush a backlog of immutable memtables in ONE load-balanced round:
+        each memtable's log_recycle task goes to a shard picked by the
+        offloader (one wire batch per shard, shards served concurrently).
+        Entries leave ``self.imm`` only as their commit lands, so a failed
+        round leaves the un-flushed tail readable and recoverable."""
+        if not self.cfg.log_recycling or not self._offload_ok("log_recycle", 0) \
+                or len(entries) < 2:
+            for e in entries:
+                self._materialize_l0(e)
+                if e in self.imm:
+                    self.imm.remove(e)
+            return
+        jobs = [self._prep_flush_job(e) for e in entries]  # oldest first
+        try:
+            self._run_jobs(jobs)
+            for job in jobs:  # commit in age order: L0 stays newest-last
+                self._commit_flush_job(job)
+                job["done"] = True
+                if job["entry"] in self.imm:
+                    self.imm.remove(job["entry"])
+        except BaseException:
+            self._abort_jobs(jobs)
+            raise
+
+    def _abort_jobs(self, jobs) -> None:
+        """Reclaim the preallocated outputs of uncommitted jobs after a
+        failed round. Sources are untouched (victims only drop at commit),
+        so state stays consistent; completed remote work is discarded."""
+        for j in jobs:
+            if j.get("done"):
+                continue
+            for o in j["outs"]:
+                if self.fs.exists(o["path"]):
+                    self.fs.delete(o["path"])
 
     # --------------------------------------------------------- compaction
     def level_bytes(self, lvl: int) -> int:
@@ -361,24 +426,66 @@ class OffloadDB:
     def _level_limit(self, lvl: int) -> int:
         return self.cfg.base_level_bytes * (self.cfg.level_ratio ** (lvl - 1))
 
+    def _run_jobs(self, jobs) -> None:
+        """Execute prepared jobs, filling job["results"]/job["where"].
+        When ≥2 jobs are offloadable they go out via submit_many — one wire
+        batch per shard, shards served concurrently; otherwise serial."""
+        parallel = (self.off is not None and len(jobs) > 1
+                    and all(self._offload_ok(j["task"], j["level"]) for j in jobs))
+        if parallel:
+            specs = []
+            for j in jobs:
+                re_, we_, mtime = self._lease_args(j["read_paths"], j["outs"])
+                specs.append({
+                    "task": j["task"], "args": j["args"],
+                    "read_extents": re_, "write_extents": we_,
+                    "target": self.cfg.peer_target, "mtime": mtime,
+                })
+            for j, (results, where) in zip(jobs, self.off.submit_many(specs)):
+                j["results"], j["where"] = results, where
+            return
+        for j in jobs:
+            j["results"], j["where"] = self._submit(
+                j["task"], *j["args"], read_paths=j["read_paths"],
+                write_outputs=j["outs"], level=j["level"],
+            )
+
     def maybe_compact(self) -> None:
+        """Each round gathers every compaction whose level pair is disjoint
+        from the others' (L0+L1, then deeper levels) and runs the round's
+        jobs concurrently across shards; commits apply serially on the
+        initiator (single metadata owner)."""
         guard = 0
         while guard < 8:
             guard += 1
+            jobs, touched = [], set()
             if len(self.imm) + len(self.levels[0]) >= self.cfg.l0_trigger:
-                self.compact_l0()
-                continue
-            done = True
+                j = self._prep_l0_job()
+                if j is not None:
+                    jobs.append(j)
+                    touched |= {0, 1}
             for lvl in range(1, self.cfg.max_level):
-                if self.level_bytes(lvl) > self._level_limit(lvl):
-                    self.compact_level(lvl)
-                    done = False
-                    break
-            if done:
+                if lvl in touched or (lvl + 1) in touched:
+                    continue
+                if self.levels[lvl] and self.level_bytes(lvl) > self._level_limit(lvl):
+                    jobs.append(self._prep_level_job(lvl))
+                    touched |= {lvl, lvl + 1}
+            if not jobs:
                 break
+            try:
+                self._run_jobs(jobs)
+                for job in jobs:
+                    if job["kind"] == "l0":
+                        self._commit_l0_job(job)
+                    else:
+                        self._commit_level_job(job)
+                    job["done"] = True
+            except BaseException:
+                self._abort_jobs(jobs)
+                raise
 
-    def compact_l0(self) -> None:
-        """L0 (+ deferred WAL runs) + overlapping L1 → new L1 tables."""
+    # -- L0 (+ deferred WAL runs) + overlapping L1 → new L1 tables
+    def _prep_l0_job(self) -> Optional[dict]:
         imm = list(self.imm)  # newest last; send newest first
         l0_ids = list(self.levels[0])
         lo, hi = None, None
@@ -391,7 +498,7 @@ class OffloadDB:
             lo = m.min_key if lo is None or m.min_key < lo else lo
             hi = m.max_key if hi is None or m.max_key > hi else hi
         if lo is None:
-            return
+            return None
         l1_ids = [t for t in self.levels[1]
                   if not (self.tables[t].max_key < lo or self.tables[t].min_key > hi)]
         recycle = []
@@ -413,13 +520,18 @@ class OffloadDB:
         total = sum(i["size"] for i in inputs) + sum(r["size"] for r in recycle) + 4096
         outs = self._alloc_outputs(total)
         drop = (self.cfg.max_level == 1)
-        results, where = self._submit(
-            "compact", inputs, recycle,
-            [{"runs": o["runs"], "cap": o["cap"]} for o in outs],
-            drop, read_paths=read_paths, write_outputs=outs, level=0,
-        )
-        new_ids = self._commit_outputs(outs, results, 1)
-        self._pollute_after_local(where, new_ids)
+        return {
+            "kind": "l0", "task": "compact", "level": 0,
+            "args": (inputs, recycle,
+                     [{"runs": o["runs"], "cap": o["cap"]} for o in outs], drop),
+            "read_paths": read_paths, "outs": outs,
+            "imm": imm, "l0_ids": l0_ids, "l1_ids": l1_ids,
+        }
+
+    def _commit_l0_job(self, job) -> None:
+        imm, l0_ids, l1_ids = job["imm"], job["l0_ids"], job["l1_ids"]
+        new_ids = self._commit_outputs(job["outs"], job["results"], 1)
+        self._pollute_after_local(job["where"], new_ids)
         # drop victims: manifest first (commit mark), then reclaim
         for e in imm:
             self.manifest.append({"kind": "droplog", "gen": e["gen"]})
@@ -439,11 +551,17 @@ class OffloadDB:
         self.imm = []
         self.stats["compactions"] += 1
 
-    def compact_level(self, lvl: int) -> None:
-        """One table from lvl + overlapping lvl+1 → lvl+1."""
-        ids = self.levels[lvl]
-        if not ids:
+    def compact_l0(self) -> None:
+        """L0 (+ deferred WAL runs) + overlapping L1 → new L1 tables."""
+        job = self._prep_l0_job()
+        if job is None:
             return
+        self._run_jobs([job])
+        self._commit_l0_job(job)
+
+    # -- one table from lvl + overlapping lvl+1 → lvl+1
+    def _prep_level_job(self, lvl: int) -> dict:
+        ids = self.levels[lvl]
         ptr = self._compact_ptr.get(lvl, 0) % len(ids)
         vid = ids[ptr]
         self._compact_ptr[lvl] = ptr + 1
@@ -459,16 +577,20 @@ class OffloadDB:
         total = sum(i["size"] for i in inputs) + 4096
         outs = self._alloc_outputs(total)
         drop = lvl + 1 >= self.cfg.max_level
-        results, where = self._submit(
-            "compact", inputs, [],
-            [{"runs": o["runs"], "cap": o["cap"]} for o in outs],
-            drop, read_paths=read_paths, write_outputs=outs, level=lvl,
-        )
-        new_ids = self._commit_outputs(outs, results, lvl + 1)
-        self._pollute_after_local(where, new_ids)
+        return {
+            "kind": "level", "task": "compact", "level": lvl,
+            "args": (inputs, [],
+                     [{"runs": o["runs"], "cap": o["cap"]} for o in outs], drop),
+            "read_paths": read_paths, "outs": outs, "vid": vid, "nxt": nxt,
+        }
+
+    def _commit_level_job(self, job) -> None:
+        lvl, vid, nxt = job["level"], job["vid"], job["nxt"]
+        new_ids = self._commit_outputs(job["outs"], job["results"], lvl + 1)
+        self._pollute_after_local(job["where"], new_ids)
         for t in [vid] + nxt:
             self.manifest.append({"kind": "drop", "table_id": t})
-        self.levels[lvl] = [t for t in ids if t != vid]
+        self.levels[lvl] = [t for t in self.levels[lvl] if t != vid]
         self.levels[lvl + 1] = sorted(
             [t for t in self.levels[lvl + 1] if t not in nxt] + new_ids,
             key=lambda t: self.tables[t].min_key,
@@ -479,12 +601,20 @@ class OffloadDB:
             self.fs.delete(self.tables.pop(t).path)
         self.stats["compactions"] += 1
 
+    def compact_level(self, lvl: int) -> None:
+        """One table from lvl + overlapping lvl+1 → lvl+1."""
+        if not self.levels[lvl]:
+            return
+        job = self._prep_level_job(lvl)
+        self._run_jobs([job])
+        self._commit_level_job(job)
+
     # ------------------------------------------------------------ recovery
     def flush_all(self) -> None:
         if len(self.mem):
             self.seal_memtable()
-        while self.imm:
-            self._materialize_l0(self.imm.pop(0))
+        if self.imm:
+            self._materialize_l0_batch(list(self.imm))
         self.manifest.commit()
 
     @classmethod

@@ -1,10 +1,30 @@
-"""Task Offloader — initiator-side (paper §III).
+"""Task Offloader — initiator-side (paper §III), sharded multi-target.
 
-Submits I/O-intensive tasks to the storage node (near-data processing) or a
-peer initiator with the volume mounted (§III-C), subject to the target's
+Submits I/O-intensive tasks to storage nodes (near-data processing) and/or
+peer initiators with the volume mounted (§III-C), subject to each target's
 admission policy. Rejected tasks run immediately on the initiator itself
 (the paper's fallback). All remote calls carry only block addresses and
 small metadata — never file contents (that's the point).
+
+Beyond the paper's single storage node, the offloader keeps a *target
+registry* with pluggable load balancing:
+
+  * ``round_robin``       — rotate through registered targets
+  * ``least_outstanding`` — pick the target with the fewest in-flight tasks
+  * ``admission_aware``   — like least_outstanding, but targets that
+    recently rejected (admission pushback) are deprioritized until a
+    submission succeeds there again
+
+and three submission shapes:
+
+  * ``submit``       — one task, ONE wire message (admit + run + complete
+    coalesced server-side; ``coalesce=False`` keeps the legacy 3-message
+    handshake for comparison)
+  * ``submit_async`` — returns an ``OffloadFuture``; the lease is released
+    and fallback-to-local executed at resolution
+  * ``submit_many``  — a batch of tasks load-balanced across targets, ONE
+    wire message per target (``RpcFabric.call_batch``), executed
+    concurrently across targets
 """
 from __future__ import annotations
 
@@ -14,7 +34,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core.engine import EngineIO, OffloadEngine
 from repro.core.fs import Extent, Lease, OffloadFS
-from repro.core.rpc import RpcFabric
+from repro.core.rpc import RpcFabric, RpcFuture
+
+LB_POLICIES = ("round_robin", "least_outstanding", "admission_aware")
 
 
 @dataclass
@@ -23,25 +45,112 @@ class OffloadStats:
     offloaded: int = 0
     rejected: int = 0
     ran_local: int = 0
+    batches: int = 0  # submit_many wire batches sent
     by_target: Dict[str, int] = field(default_factory=dict)
+    rejected_by_target: Dict[str, int] = field(default_factory=dict)
+
+
+# submit_async resolves to (result, where_ran); same semantics as the
+# fabric's future, so reuse it rather than maintaining a twin
+OffloadFuture = RpcFuture
 
 
 class TaskOffloader:
-    """One per initiator node. Targets = {"storage": engine} ∪ peers."""
+    """One per initiator node. Targets = storage node(s) ∪ peer initiators."""
 
     def __init__(self, fs: OffloadFS, fabric: RpcFabric, *, node: str,
-                 storage_node: str = "storage0"):
+                 storage_node: str = "storage0",
+                 targets: Optional[Sequence[str]] = None,
+                 lb_policy: str = "round_robin", coalesce: bool = True):
         self.fs = fs
         self.fabric = fabric
         self.node = node
         self.storage_node = storage_node
+        if lb_policy not in LB_POLICIES:
+            raise ValueError(f"unknown lb_policy {lb_policy!r}")
+        self.lb_policy = lb_policy
+        # coalesce=False keeps the legacy 3-message handshake per task and
+        # unbatched submit_many — the Fig. 14 baseline
+        self.coalesce = coalesce
+        self.targets: List[str] = list(targets) if targets else [storage_node]
         self._local_engine = OffloadEngine(fs, node=node, enable_cache=False)
         self.stats = OffloadStats()
         self._lock = threading.Lock()
+        self._outstanding: Dict[str, int] = {t: 0 for t in self.targets}
+        self._reject_streak: Dict[str, int] = {t: 0 for t in self.targets}
+        self._rr = 0
 
+    # ----------------------------------------------------- target registry
+    def add_target(self, name: str) -> None:
+        with self._lock:
+            if name not in self.targets:
+                self.targets.append(name)
+                self._outstanding[name] = 0
+                self._reject_streak[name] = 0
+
+    def outstanding(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._outstanding)
+
+    def pick_target(self) -> str:
+        """Load-balanced target choice (never the initiator itself)."""
+        with self._lock:
+            return self._pick_locked()
+
+    def _pick_locked(self) -> str:
+        n = len(self.targets)
+        if n == 1:
+            return self.targets[0]
+        start = self._rr % n
+        self._rr += 1
+        if self.lb_policy == "round_robin":
+            return self.targets[start]
+        rotation = [self.targets[(start + i) % n] for i in range(n)]
+        if self.lb_policy == "least_outstanding":
+            return min(rotation, key=lambda t: self._outstanding[t])
+        # admission_aware: avoid targets pushing back, then least loaded
+        return min(rotation,
+                   key=lambda t: (self._reject_streak[t], self._outstanding[t]))
+
+    def _begin(self, dst: str) -> None:
+        with self._lock:
+            self.stats.submitted += 1
+            self._outstanding[dst] = self._outstanding.get(dst, 0) + 1
+
+    def _end(self, dst: str, outcome: str) -> None:
+        """outcome ∈ {offloaded, rejected, error}."""
+        with self._lock:
+            self._outstanding[dst] = max(0, self._outstanding.get(dst, 1) - 1)
+            if outcome == "offloaded":
+                self.stats.offloaded += 1
+                self.stats.by_target[dst] = self.stats.by_target.get(dst, 0) + 1
+                self._reject_streak[dst] = 0
+            elif outcome == "rejected":
+                self.stats.rejected += 1
+                self.stats.ran_local += 1
+                self.stats.rejected_by_target[dst] = (
+                    self.stats.rejected_by_target.get(dst, 0) + 1
+                )
+                self._reject_streak[dst] = self._reject_streak.get(dst, 0) + 1
+
+    # -------------------------------------------------------------- stubs
     def register_local_stub(self, name: str, fn: Callable) -> None:
         """Register the task implementation for local (rejected) execution."""
         self._local_engine.register_stub(name, fn)
+
+    # --------------------------------------------------------- submission
+    @staticmethod
+    def _wire(lease: Lease) -> dict:
+        return {
+            "task_id": lease.task_id,
+            "read_blocks": sorted(lease.read_blocks),
+            "write_blocks": sorted(lease.write_blocks),
+        }
+
+    def _run_local(self, task: str, lease: Lease, args, kwargs, mtime):
+        return self._local_engine.run_task(
+            task, lease, *args, mtime=mtime, bypass_cache=True, **kwargs
+        )
 
     def submit(
         self,
@@ -52,42 +161,191 @@ class TaskOffloader:
         target: Optional[str] = None,
         mtime: float = 0.0,
         bypass_cache: bool = False,
+        coalesce: Optional[bool] = None,
         **kwargs,
     ):
-        """Offload `task` to `target` (default: the storage node). Returns
+        """Offload `task` to `target` (default: load-balanced pick). Returns
         (result, where_ran). The initiator quiesces on the leased write set
         for the duration (no DLM — lease discipline instead)."""
-        dst = target or self.storage_node
+        coalesce = self.coalesce if coalesce is None else coalesce
+        dst = target or self.pick_target()
         lease = self.fs.grant_lease(read_extents, write_extents)
-        with self._lock:
-            self.stats.submitted += 1
+        self._begin(dst)
+        ok = False
         try:
-            admitted = self.fabric.call(self.node, dst, "admit", self.node)
-            if admitted:
-                result = self.fabric.call(
-                    self.node, dst, "run_task", task,
-                    {
-                        "task_id": lease.task_id,
-                        "read_blocks": sorted(lease.read_blocks),
-                        "write_blocks": sorted(lease.write_blocks),
-                    },
-                    args, kwargs, mtime, bypass_cache,
+            if coalesce:
+                status, result = self.fabric.call(
+                    self.node, dst, "submit_task", self.node, task,
+                    self._wire(lease), args, kwargs, mtime, bypass_cache,
                 )
-                self.fabric.call(self.node, dst, "complete", self.node)
-                with self._lock:
-                    self.stats.offloaded += 1
-                    self.stats.by_target[dst] = self.stats.by_target.get(dst, 0) + 1
+                admitted = status == "ok"
+            else:
+                # legacy 3-message handshake (admit / run_task / complete)
+                admitted = self.fabric.call(self.node, dst, "admit", self.node)
+                if admitted:
+                    try:
+                        result = self.fabric.call(
+                            self.node, dst, "run_task", task, self._wire(lease),
+                            args, kwargs, mtime, bypass_cache,
+                        )
+                    finally:
+                        # even on a stub error the admission slot goes back
+                        self.fabric.call(self.node, dst, "complete", self.node)
+            if admitted:
+                ok = True
+                self._end(dst, "offloaded")
                 return result, dst
             # rejected → run locally on the initiator
-            with self._lock:
-                self.stats.rejected += 1
-                self.stats.ran_local += 1
-            result = self._local_engine.run_task(
-                task, lease, *args, mtime=mtime, bypass_cache=True, **kwargs
-            )
+            ok = True
+            self._end(dst, "rejected")
+            result = self._run_local(task, lease, args, kwargs, mtime)
             return result, self.node
         finally:
+            if not ok:
+                self._end(dst, "error")
             self.fs.release_lease(lease)
+
+    def submit_async(
+        self,
+        task: str,
+        *args,
+        read_extents: Sequence[Extent] = (),
+        write_extents: Sequence[Extent] = (),
+        target: Optional[str] = None,
+        mtime: float = 0.0,
+        bypass_cache: bool = False,
+        **kwargs,
+    ) -> OffloadFuture:
+        """Non-blocking submit. The lease stays outstanding (the initiator
+        keeps quiescing on the write set) until the future resolves; the
+        rejected-task fallback runs at resolution. Always a single
+        coalesced wire message — async submission has no legacy-handshake
+        form, so ``coalesce=False`` offloaders still coalesce here."""
+        dst = target or self.pick_target()
+        lease = self.fs.grant_lease(read_extents, write_extents)
+        self._begin(dst)
+        ofut = OffloadFuture()
+        wire_fut: RpcFuture = self.fabric.call_async(
+            self.node, dst, "submit_task", self.node, task,
+            self._wire(lease), args, kwargs, mtime, bypass_cache,
+        )
+
+        def _done(f: RpcFuture):
+            try:
+                exc = f.exception()
+                if exc is not None:
+                    self._end(dst, "error")
+                    ofut.set_exception(exc)
+                    return
+                status, result = f.result()
+                if status == "ok":
+                    self._end(dst, "offloaded")
+                    ofut.set_result((result, dst))
+                    return
+                self._end(dst, "rejected")
+                try:
+                    result = self._run_local(task, lease, args, kwargs, mtime)
+                except BaseException as e:  # noqa: BLE001
+                    ofut.set_exception(e)
+                    return
+                ofut.set_result((result, self.node))
+            finally:
+                self.fs.release_lease(lease)
+
+        wire_fut.add_done_callback(_done)
+        return ofut
+
+    def submit_many(self, specs: Sequence[dict]) -> List[Any]:
+        """Load-balanced batch submission: each spec is a dict with keys
+        ``task``, ``args`` (tuple), plus optional ``kwargs``,
+        ``read_extents``, ``write_extents``, ``target``, ``mtime``,
+        ``bypass_cache``. One wire message per distinct target
+        (``call_batch``), targets served concurrently; rejected sub-tasks
+        fall back to local execution. Returns [(result, where)] in input
+        order. If any wire batch fails the whole call raises after all
+        leases are released — results of sub-tasks that did complete are
+        discarded, so callers must treat the batch as all-or-nothing."""
+        if not specs:
+            return []
+        if not self.coalesce:  # legacy plane: one handshake per task, serial
+            return [
+                self.submit(
+                    s["task"], *tuple(s.get("args", ())),
+                    read_extents=s.get("read_extents", ()),
+                    write_extents=s.get("write_extents", ()),
+                    target=s.get("target"), mtime=s.get("mtime", 0.0),
+                    bypass_cache=s.get("bypass_cache", False),
+                    coalesce=False, **dict(s.get("kwargs", {})),
+                )
+                for s in specs
+            ]
+        plan = []  # (idx, spec, dst, lease)
+        try:
+            for idx, s in enumerate(specs):
+                dst = s.get("target") or self.pick_target()
+                lease = self.fs.grant_lease(
+                    s.get("read_extents", ()), s.get("write_extents", ())
+                )
+                self._begin(dst)
+                plan.append((idx, s, dst, lease))
+        except BaseException:
+            # e.g. LeaseViolation mid-batch: unwind what was granted
+            for _, _, d, lease in plan:
+                self._end(d, "error")
+                self.fs.release_lease(lease)
+            raise
+        groups: Dict[str, List[tuple]] = {}
+        for entry in plan:
+            groups.setdefault(entry[2], []).append(entry)
+        futures = []
+        for dst, entries in groups.items():  # insertion order: deterministic
+            calls = [
+                ("submit_task",
+                 (self.node, s["task"], self._wire(lease),
+                  tuple(s.get("args", ())), dict(s.get("kwargs", {})),
+                  s.get("mtime", 0.0), s.get("bypass_cache", False)),
+                 {})
+                for (_, s, _, lease) in entries
+            ]
+            futures.append((dst, entries, self.fabric.call_batch_async(
+                self.node, dst, calls)))
+            with self._lock:
+                self.stats.batches += 1
+        out: List[Any] = [None] * len(specs)
+        pending_local = []  # rejected: run after all wires resolve
+        first_exc: Optional[BaseException] = None
+        for dst, entries, fut in futures:
+            try:
+                results = fut.result()
+            except BaseException as e:  # noqa: BLE001
+                for (_, _, _, lease) in entries:
+                    self._end(dst, "error")
+                    self.fs.release_lease(lease)
+                if first_exc is None:
+                    first_exc = e
+                continue
+            for (idx, s, _, lease), (status, result) in zip(entries, results):
+                if status == "ok":
+                    self._end(dst, "offloaded")
+                    out[idx] = (result, dst)
+                    self.fs.release_lease(lease)
+                else:
+                    self._end(dst, "rejected")
+                    pending_local.append((idx, s, lease))
+        if first_exc is not None:
+            for (_, _, lease) in pending_local:
+                self.fs.release_lease(lease)
+            raise first_exc
+        for idx, s, lease in sorted(pending_local):
+            try:
+                result = self._run_local(
+                    s["task"], lease, tuple(s.get("args", ())),
+                    dict(s.get("kwargs", {})), s.get("mtime", 0.0),
+                )
+                out[idx] = (result, self.node)
+            finally:
+                self.fs.release_lease(lease)
+        return out
 
 
 def serve_engine(engine: OffloadEngine, fabric: RpcFabric, policy,
@@ -96,6 +354,8 @@ def serve_engine(engine: OffloadEngine, fabric: RpcFabric, policy,
 
     The lease is reconstructed from the wire payload (block sets), keeping
     the fabric honest: the target never sees initiator object references.
+    Registers both the legacy 3-message handshake (admit / run_task /
+    complete) and the coalesced single-message ``submit_task``.
     """
     n = node or engine.node
 
@@ -106,16 +366,48 @@ def serve_engine(engine: OffloadEngine, fabric: RpcFabric, policy,
     def complete(initiator: str) -> None:
         policy.complete(initiator)
 
-    def run_task(task, lease_wire, args, kwargs, mtime, bypass_cache):
-        lease = Lease(
+    def _lease(lease_wire) -> Lease:
+        return Lease(
             lease_wire["task_id"],
             frozenset(lease_wire["read_blocks"]),
             frozenset(lease_wire["write_blocks"]),
         )
+
+    def run_task(task, lease_wire, args, kwargs, mtime, bypass_cache):
         return engine.run_task(
-            task, lease, *args, mtime=mtime, bypass_cache=bypass_cache, **kwargs
+            task, _lease(lease_wire), *args,
+            mtime=mtime, bypass_cache=bypass_cache, **kwargs
         )
+
+    def submit_task(initiator, task, lease_wire, args, kwargs, mtime,
+                    bypass_cache):
+        """admit + run + complete in ONE round trip."""
+        policy.register(initiator)
+        if not policy.admit(initiator):
+            return ("rejected", None)
+        try:
+            result = engine.run_task(
+                task, _lease(lease_wire), *args,
+                mtime=mtime, bypass_cache=bypass_cache, **kwargs
+            )
+        finally:
+            policy.complete(initiator)
+        return ("ok", result)
 
     fabric.register(n, "admit", admit)
     fabric.register(n, "complete", complete)
     fabric.register(n, "run_task", run_task)
+    fabric.register(n, "submit_task", submit_task)
+
+
+def serve_engines(engines: Sequence[OffloadEngine], fabric: RpcFabric,
+                  policies) -> List[str]:
+    """Wire N engines (shards) into the fabric; `policies` is one shared
+    policy or a per-engine sequence. Returns the target node names."""
+    if not isinstance(policies, (list, tuple)):
+        policies = [policies] * len(engines)
+    names = []
+    for eng, pol in zip(engines, policies):
+        serve_engine(eng, fabric, pol)
+        names.append(eng.node)
+    return names

@@ -1,17 +1,26 @@
 """In-process RPC plane modeling the paper's gRPC stub/skeleton split.
 
 Messages are really serialized (pickle) so byte counts are honest; every
-call is recorded (src, dst, method, req_bytes, resp_bytes) — the DES
-network model replays these. Handlers are registered per node; a call is
-dispatched synchronously (deterministic) but the fabric is thread-safe so
-concurrency tests can drive multiple initiators from threads.
+call is recorded (src, dst, method, req_bytes, resp_bytes, n_calls) — the
+DES network model replays these. Handlers are registered per node; a call
+is dispatched synchronously (deterministic) or asynchronously through a
+small worker pool (``call_async`` → ``RpcFuture``). Batched submission
+(``call_batch``) coalesces many small metadata calls into ONE wire message
+while accounting bytes exactly as the equivalent individual calls would —
+the message-count reduction is the honest saving, not a byte discount.
+
+Determinism: a monotonically increasing sequence number is assigned at
+submission time (sync and async alike) and ``records`` is always flushed in
+sequence order, so the replay trace is independent of worker-thread
+completion interleaving.
 """
 from __future__ import annotations
 
 import pickle
+import queue
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass
@@ -21,49 +30,279 @@ class RpcRecord:
     method: str
     req_bytes: int
     resp_bytes: int
+    n_calls: int = 1  # sub-calls coalesced into this wire message
 
 
 class RpcError(Exception):
     pass
 
 
-class RpcFabric:
-    """Registry of node endpoints + synchronous transport with accounting."""
+class RpcFuture:
+    """Resolution handle for an async call; resolves exactly once."""
 
     def __init__(self):
+        self._event = threading.Event()
+        self._result: Any = None
+        self._exc: Optional[BaseException] = None
+        self._callbacks: List[Callable[["RpcFuture"], None]] = []
+        self._lock = threading.Lock()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def set_result(self, value: Any) -> None:
+        self._result = value
+        self._finish()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._finish()
+
+    def _finish(self) -> None:
+        self._event.set()
+        with self._lock:
+            cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            cb(self)
+
+    def add_done_callback(self, cb: Callable[["RpcFuture"], None]) -> None:
+        with self._lock:
+            if not self._event.is_set():
+                self._callbacks.append(cb)
+                return
+        cb(self)
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError("rpc future not resolved")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        if not self._event.wait(timeout):
+            raise TimeoutError("rpc future not resolved")
+        return self._exc
+
+
+class RpcFabric:
+    """Registry of node endpoints + transport with per-message accounting."""
+
+    def __init__(self, *, workers: int = 8):
         self._handlers: Dict[Tuple[str, str], Callable] = {}
         self._lock = threading.Lock()
         self.records: List[RpcRecord] = []
         self.bytes_by_link: Dict[Tuple[str, str], int] = {}
+        # deterministic record ordering: seq assigned at submission, records
+        # buffered until every earlier seq has landed
+        self._seq = 0
+        self._next_flush = 0
+        self._staged: Dict[int, Optional[RpcRecord]] = {}
+        self._flushed = threading.Condition(self._lock)
+        # lazy worker pool for call_async
+        self._n_workers = workers
+        self._workers: List[threading.Thread] = []
+        self._jobs: "queue.Queue" = queue.Queue()
 
+    # -------------------------------------------------------- registration
     def register(self, node: str, method: str, fn: Callable) -> None:
         with self._lock:
             self._handlers[(node, method)] = fn
 
-    def call(self, src: str, dst: str, method: str, *args, **kwargs) -> Any:
-        req = pickle.dumps((args, kwargs))
+    def _handler(self, dst: str, method: str) -> Callable:
         with self._lock:
             fn = self._handlers.get((dst, method))
         if fn is None:
             raise RpcError(f"no handler {method!r} on node {dst!r}")
-        a, kw = pickle.loads(req)  # honest copy across the "wire"
-        result = fn(*a, **kw)
-        resp = pickle.dumps(result)
-        rec = RpcRecord(src, dst, method, len(req), len(resp))
+        return fn
+
+    # ---------------------------------------------------------- accounting
+    def _alloc_seq(self) -> int:
         with self._lock:
-            self.records.append(rec)
-            key = (src, dst)
-            self.bytes_by_link[key] = (
-                self.bytes_by_link.get(key, 0) + rec.req_bytes + rec.resp_bytes
-            )
+            s = self._seq
+            self._seq += 1
+            return s
+
+    def _land(self, seq: int, rec: Optional[RpcRecord]) -> None:
+        """Stage a finished message; flush the contiguous prefix in order.
+        rec=None marks an aborted message (still advances the cursor)."""
+        with self._lock:
+            self._staged[seq] = rec
+            while self._next_flush in self._staged:
+                r = self._staged.pop(self._next_flush)
+                self._next_flush += 1
+                if r is not None:
+                    self.records.append(r)
+                    key = (r.src, r.dst)
+                    self.bytes_by_link[key] = (
+                        self.bytes_by_link.get(key, 0) + r.req_bytes + r.resp_bytes
+                    )
+            self._flushed.notify_all()
+
+    # ----------------------------------------------------------- sync path
+    def call(self, src: str, dst: str, method: str, *args, **kwargs) -> Any:
+        req = pickle.dumps((args, kwargs))  # may raise — before seq alloc
+        seq = self._alloc_seq()
+        try:
+            fn = self._handler(dst, method)
+        except RpcError:
+            self._land(seq, None)  # never left the initiator
+            raise
+        a, kw = pickle.loads(req)  # honest copy across the "wire"
+        try:
+            result = fn(*a, **kw)
+            resp = pickle.dumps(result)
+        except Exception as e:
+            # an error response crosses the wire too
+            err = pickle.dumps(repr(e))
+            self._land(seq, RpcRecord(src, dst, method, len(req), len(err)))
+            raise
+        self._land(seq, RpcRecord(src, dst, method, len(req), len(resp)))
         return pickle.loads(resp)
 
+    # ---------------------------------------------------------- async path
+    def _ensure_workers(self) -> None:
+        if self._workers:
+            return
+        with self._lock:
+            if self._workers:
+                return
+            for i in range(self._n_workers):
+                t = threading.Thread(
+                    target=self._worker_loop, name=f"rpc-worker-{i}", daemon=True
+                )
+                t.start()
+                self._workers.append(t)
+
+    def _worker_loop(self) -> None:
+        while True:
+            job = self._jobs.get()
+            if job is None:  # pragma: no cover - shutdown path
+                return
+            try:
+                job()
+            except BaseException:  # pragma: no cover - job() resolves its
+                pass  # own future; never let a stray error kill the worker
+
+    def call_async(self, src: str, dst: str, method: str, *args, **kwargs
+                   ) -> RpcFuture:
+        """Submit without blocking; the seq (and hence the replay-record
+        position) is fixed NOW, whatever order workers finish in."""
+        self._ensure_workers()
+        req = pickle.dumps((args, kwargs))  # may raise — before seq alloc
+        seq = self._alloc_seq()
+        fut = RpcFuture()
+
+        def run():
+            try:
+                fn = self._handler(dst, method)
+            except RpcError as e:
+                self._land(seq, None)
+                fut.set_exception(e)
+                return
+            try:
+                a, kw = pickle.loads(req)
+                result = fn(*a, **kw)
+                resp = pickle.dumps(result)
+            except BaseException as e:  # noqa: BLE001 - propagated via future
+                err = pickle.dumps(repr(e))
+                self._land(seq, RpcRecord(src, dst, method, len(req), len(err)))
+                fut.set_exception(e)
+                return
+            self._land(seq, RpcRecord(src, dst, method, len(req), len(resp)))
+            fut.set_result(pickle.loads(resp))
+
+        self._jobs.put(run)
+        return fut
+
+    # ---------------------------------------------------------- batch path
+    def call_batch(self, src: str, dst: str,
+                   calls: Sequence[Tuple[str, tuple, dict]]) -> List[Any]:
+        """ONE wire message carrying many (method, args, kwargs) sub-calls,
+        executed on `dst` in order. Byte accounting equals the sum of the
+        equivalent individual calls exactly (same pickles) — batching saves
+        messages/round-trips, never bytes. A sub-call exception aborts the
+        batch and propagates after the partial response is accounted."""
+        if not calls:
+            return []
+        return self._execute_batch(self._alloc_seq(), src, dst, calls)
+
+    def _execute_batch(self, seq: int, src: str, dst: str,
+                       calls: Sequence[Tuple[str, tuple, dict]]) -> List[Any]:
+        try:
+            reqs = [pickle.dumps((args, kwargs)) for _, args, kwargs in calls]
+        except Exception:
+            self._land(seq, None)  # unpicklable request: nothing hit the wire
+            raise
+        req_bytes = sum(len(r) for r in reqs)
+        methods = [m for m, _, _ in calls]
+        try:
+            fns = [self._handler(dst, m) for m in methods]
+        except RpcError:
+            self._land(seq, None)
+            raise
+        label = f"batch:{methods[0]}" if len(set(methods)) == 1 else "batch:mixed"
+        results: List[Any] = []
+        resp_bytes = 0
+        try:
+            for fn, wire in zip(fns, reqs):
+                a, kw = pickle.loads(wire)
+                r = fn(*a, **kw)
+                blob = pickle.dumps(r)
+                resp_bytes += len(blob)
+                results.append(pickle.loads(blob))
+        except Exception as e:
+            resp_bytes += len(pickle.dumps(repr(e)))
+            self._land(seq, RpcRecord(src, dst, label, req_bytes, resp_bytes,
+                                      n_calls=len(calls)))
+            raise
+        self._land(seq, RpcRecord(src, dst, label, req_bytes, resp_bytes,
+                                  n_calls=len(calls)))
+        return results
+
+    def call_batch_async(self, src: str, dst: str,
+                         calls: Sequence[Tuple[str, tuple, dict]]) -> RpcFuture:
+        """Async variant of call_batch (one wire message, one future). The
+        seq is fixed at submission so the replay position is deterministic."""
+        self._ensure_workers()
+        fut = RpcFuture()
+        if not calls:
+            fut.set_result([])
+            return fut
+        seq = self._alloc_seq()
+
+        def run():
+            try:
+                fut.set_result(self._execute_batch(seq, src, dst, calls))
+            except BaseException as e:  # noqa: BLE001
+                fut.set_exception(e)
+
+        self._jobs.put(run)
+        return fut
+
     # ------------------------------------------------------------- stats
+    def drain(self, timeout: float = 30.0) -> None:
+        """Block until every submitted message has landed in `records`."""
+        with self._lock:
+            if not self._flushed.wait_for(
+                lambda: self._next_flush >= self._seq, timeout
+            ):
+                raise TimeoutError("rpc fabric drain timed out")
+
     def total_bytes(self) -> int:
         with self._lock:
             return sum(self.bytes_by_link.values())
 
+    def total_messages(self) -> int:
+        with self._lock:
+            return len(self.records)
+
+    def total_subcalls(self) -> int:
+        with self._lock:
+            return sum(r.n_calls for r in self.records)
+
     def reset(self):
+        self.drain()
         with self._lock:
             self.records.clear()
             self.bytes_by_link.clear()

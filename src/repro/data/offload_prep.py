@@ -29,15 +29,23 @@ def stub_preprocess(io, images: List[dict], out_size: int) -> List[np.ndarray]:
 class OffloadPrep:
     def __init__(self, fs: OffloadFS, offloader: Optional[TaskOffloader],
                  *, out_size: int = 224, offload_ratio: float = 1 / 3,
-                 targets: Sequence[str] = ("storage0",)):
+                 targets: Optional[Sequence[str]] = None):
         self.fs = fs
         self.off = offloader
         self.out_size = out_size
         self.offload_ratio = offload_ratio
-        self.targets = list(targets)
+        # None → follow the offloader's LIVE target registry (shards/peers
+        # added later via add_target get prep shares too)
+        self._targets = list(targets) if targets is not None else None
         if offloader is not None:
             offloader.register_local_stub("preprocess", stub_preprocess)
         self.stats = {"local": 0, "offloaded": 0, "rejected": 0}
+
+    @property
+    def targets(self) -> List[str]:
+        if self._targets is not None:
+            return self._targets
+        return list(self.off.targets) if self.off else ["storage0"]
 
     # ------------------------------------------------------------ dataset
     def materialize_corpus(self, n_images: int, prefix: str = "/img",
@@ -78,26 +86,30 @@ class OffloadPrep:
         shares.append((None, list(range(idx, n))))  # local share
 
         out: List[Optional[np.ndarray]] = [None] * n
+        # remote shares: one submit_many round — one wire batch per target,
+        # targets served concurrently (instead of serial per-target calls)
+        specs, spec_ids = [], []
+        local_ids: List[int] = []
         for target, ids in shares:
             if not ids:
+                continue
+            if target is None:
+                local_ids = ids
                 continue
             args, extents = [], []
             for i in ids:
                 a, e = self._image_arg(paths[i], epoch_seed * 1000003 + i)
                 args.append(a)
                 extents.extend(e)
-            if target is None:
-                for a, i in zip(args, ids):
-                    buf = self.fs.read(paths[i])
-                    out[i] = preprocess_image(buf, a["seed"], self.out_size)
-                self.stats["local"] += len(ids)
-            else:
-                tensors, where = self.off.submit(
-                    "preprocess", args, self.out_size,
-                    read_extents=extents, write_extents=[],
-                    target=target,
-                    mtime=max(self.fs.stat(paths[i]).mtime for i in ids),
-                )
+            specs.append({
+                "task": "preprocess", "args": (args, self.out_size),
+                "read_extents": extents, "write_extents": [],
+                "target": target,
+                "mtime": max(self.fs.stat(paths[i]).mtime for i in ids),
+            })
+            spec_ids.append(ids)
+        if specs:
+            for ids, (tensors, where) in zip(spec_ids, self.off.submit_many(specs)):
                 if where == self.off.node:
                     self.stats["rejected"] += len(ids)
                     self.stats["local"] += len(ids)
@@ -105,4 +117,10 @@ class OffloadPrep:
                     self.stats["offloaded"] += len(ids)
                 for i, t in zip(ids, tensors):
                     out[i] = t
+        for i in local_ids:
+            buf = self.fs.read(paths[i])
+            out[i] = preprocess_image(
+                buf, epoch_seed * 1000003 + i, self.out_size
+            )
+        self.stats["local"] += len(local_ids)
         return np.stack(out)  # type: ignore[arg-type]

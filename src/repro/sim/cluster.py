@@ -35,6 +35,7 @@ class TestbedSpec:
     posvol_bw: float = 8.0 * GB  # PoseidonOS reactor pool: remote volume I/O
     dlm_rtt: float = 200e-6
     rpc_rtt: float = 60e-6  # gRPC over IB round trip
+    rpc_dispatch: float = 2e-6  # per-sub-call unmarshal/dispatch on the target
     merge_rate: float = 150e6  # bytes/s/core merge-sort
     preprocess_rate: float = 25.0  # images/s/core
     kv_cpu_per_op: float = 12e-6  # initiator CPU per KV op (s)
@@ -44,61 +45,98 @@ TESTBED = TestbedSpec()
 
 
 class Cluster:
-    """Instantiates DES resources for a scenario."""
+    """Instantiates DES resources for a scenario.
+
+    ``n_storage`` models a *sharded* offload plane: N storage targets, each
+    with its own CPU pool, HCA links, and NVMe array slice. The single-node
+    attributes (``cpu_s``, ``net_s``, ``nvme_r``, …) stay as aliases for
+    target 0 so single-target scenarios are unchanged; sharded scenarios
+    pass ``target=k`` to the primitives."""
 
     def __init__(self, sim: Sim, spec: TestbedSpec = TESTBED, *,
-                 n_initiators: int = 1):
+                 n_initiators: int = 1, n_storage: int = 1):
         self.sim = sim
         self.spec = spec
         self.n_initiators = n_initiators
+        self.n_storage = n_storage
         self.cpu_i: List[Resource] = [
             sim.resource(f"cpu_init{i}", 1.0, servers=spec.compute_cores)
             for i in range(n_initiators)
         ]
-        self.cpu_s = sim.resource(
-            "cpu_storage", spec.storage_core_speed, servers=spec.storage_cores
-        )
+        self.cpu_s_t: List[Resource] = [
+            sim.resource(f"cpu_storage{t}", spec.storage_core_speed,
+                         servers=spec.storage_cores)
+            for t in range(n_storage)
+        ]
         # network: per-initiator link (tx+rx combined FIFO) + storage links
         self.net_i: List[Resource] = [
             sim.resource(f"net_init{i}", spec.link_bw) for i in range(n_initiators)
         ]
-        self.net_s = sim.resource(
-            "net_storage", spec.link_bw, servers=spec.storage_links
-        )
-        self.nvme_r = sim.resource("nvme_read", spec.nvme_read_bw)
-        self.nvme_w = sim.resource("nvme_write", spec.nvme_write_bw)
+        self.net_s_t: List[Resource] = [
+            sim.resource(f"net_storage{t}", spec.link_bw,
+                         servers=spec.storage_links)
+            for t in range(n_storage)
+        ]
+        self.nvme_r_t: List[Resource] = [
+            sim.resource(f"nvme_read{t}", spec.nvme_read_bw)
+            for t in range(n_storage)
+        ]
+        self.nvme_w_t: List[Resource] = [
+            sim.resource(f"nvme_write{t}", spec.nvme_write_bw)
+            for t in range(n_storage)
+        ]
         # remote (initiator-side) volume I/O passes through PoseidonOS
         # reactors — a shared pool the paper identifies as the NoOffload
         # scalability limit; near-data tasks bypass it (SPDK direct)
-        self.posvol = sim.resource("posvol", spec.posvol_bw)
+        self.posvol_t: List[Resource] = [
+            sim.resource(f"posvol{t}", spec.posvol_bw) for t in range(n_storage)
+        ]
+        # target-0 aliases (back-compat for single-storage scenarios)
+        self.cpu_s = self.cpu_s_t[0]
+        self.net_s = self.net_s_t[0]
+        self.nvme_r = self.nvme_r_t[0]
+        self.nvme_w = self.nvme_w_t[0]
+        self.posvol = self.posvol_t[0]
         self.dlm = sim.resource("dlm", 1.0 / spec.dlm_rtt)  # msgs/s
 
     # ------------------------------------------------------ primitive ops
-    def net_transfer(self, initiator: int, nbytes: float):
+    def net_transfer(self, initiator: int, nbytes: float, *, target: int = 0):
         """Initiator↔storage transfer: both link FIFOs serve the bytes."""
         yield ("use", self.net_i[initiator], nbytes)
-        yield ("use", self.net_s, nbytes)
+        yield ("use", self.net_s_t[target], nbytes)
 
-    def storage_read(self, initiator: int, nbytes: float, *, to_initiator=True):
-        yield ("use", self.nvme_r, nbytes)
+    def storage_read(self, initiator: int, nbytes: float, *,
+                     to_initiator=True, target: int = 0):
+        yield ("use", self.nvme_r_t[target], nbytes)
         if to_initiator:
-            yield ("use", self.posvol, nbytes)
-            yield from self.net_transfer(initiator, nbytes)
+            yield ("use", self.posvol_t[target], nbytes)
+            yield from self.net_transfer(initiator, nbytes, target=target)
 
-    def storage_write(self, initiator: int, nbytes: float, *, from_initiator=True):
+    def storage_write(self, initiator: int, nbytes: float, *,
+                      from_initiator=True, target: int = 0):
         if from_initiator:
-            yield from self.net_transfer(initiator, nbytes)
-            yield ("use", self.posvol, nbytes)
-        yield ("use", self.nvme_w, nbytes)
+            yield from self.net_transfer(initiator, nbytes, target=target)
+            yield ("use", self.posvol_t[target], nbytes)
+        yield ("use", self.nvme_w_t[target], nbytes)
 
-    def cpu_work(self, initiator: Optional[int], seconds: float):
+    def cpu_work(self, initiator: Optional[int], seconds: float, *,
+                 target: int = 0):
         """seconds = single-core-seconds of work; None → storage node."""
-        res = self.cpu_s if initiator is None else self.cpu_i[initiator]
+        res = self.cpu_s_t[target] if initiator is None else self.cpu_i[initiator]
         yield ("use", res, seconds)
 
     def dlm_msgs(self, n: int):
         yield ("use", self.dlm, float(n))
 
-    def rpc(self, initiator: int, nbytes: float = 4096):
+    def rpc(self, initiator: int, nbytes: float = 4096, *, target: int = 0):
         yield ("delay", self.spec.rpc_rtt)
-        yield from self.net_transfer(initiator, nbytes)
+        yield from self.net_transfer(initiator, nbytes, target=target)
+
+    def rpc_batch(self, initiator: int, n_msgs: int, nbytes: float, *,
+                  target: int = 0):
+        """A coalesced wire message carrying `n_msgs` sub-calls: ONE round
+        trip (the saving vs n_msgs × rpc is (n_msgs-1) × rpc_rtt), but every
+        sub-call still pays target-side unmarshal/dispatch, and the bytes
+        still flow through both link FIFOs."""
+        yield ("delay", self.spec.rpc_rtt + max(0, n_msgs - 1) * self.spec.rpc_dispatch)
+        yield from self.net_transfer(initiator, nbytes, target=target)

@@ -113,6 +113,78 @@ def test_superblock_mount_roundtrip():
     assert fs2.read("/x/a") == b"q" * 5000
 
 
+def test_initiator_read_of_leased_write_blocks_raises():
+    """Quiesce discipline: while a task holds a WRITE lease the initiator
+    must not even READ those blocks (no DLM orders the access)."""
+    _, fs = make_fs()
+    fs.create("/a")
+    fs.write("/a", b"y" * BLOCK_SIZE * 4, 0)
+    fs.create("/other")
+    fs.write("/other", b"o" * BLOCK_SIZE, 0)
+    ex = fs.stat("/a").extents
+    lease = fs.grant_lease([], ex)
+    with pytest.raises(LeaseViolation):
+        fs.read("/a")
+    with pytest.raises(LeaseViolation):
+        fs.read("/a", 0, 10)
+    assert fs.read("/other") == b"o" * BLOCK_SIZE  # unleased files fine
+    fs.release_lease(lease)
+    assert fs.read("/a") == b"y" * BLOCK_SIZE * 4
+    # READ leases do not quiesce the initiator (it only must not mutate)
+    lease = fs.grant_lease(ex, [])
+    assert fs.read("/a") == b"y" * BLOCK_SIZE * 4
+    fs.release_lease(lease)
+
+
+def test_double_release_is_idempotent():
+    _, fs = make_fs()
+    fs.create("/a")
+    fs.write("/a", b"x" * BLOCK_SIZE * 2, 0)
+    ex = fs.stat("/a").extents
+    lease = fs.grant_lease([], ex)
+    fs.release_lease(lease)
+    fs.release_lease(lease)  # second release: no-op, no raise
+    assert lease.done
+    fs.write("/a", b"w" * BLOCK_SIZE, 0)  # blocks really free
+    # a later lease over the same blocks is unaffected by the stale handle
+    lease2 = fs.grant_lease([], ex)
+    fs.release_lease(lease)  # releasing the OLD lease again: still no-op
+    with pytest.raises(LeaseViolation):
+        fs.write("/a", b"v" * BLOCK_SIZE, 0)  # lease2 still guards
+    fs.release_lease(lease2)
+
+
+def test_stale_mtime_reads_bypass_offload_cache_counted():
+    """Coarse mtime coherence: every cached block older than the request's
+    mtime is bypassed (and re-read from NVMe), with exact accounting."""
+    dev, fs = make_fs()
+    fs.create("/a")
+    fs.write("/a", b"1" * BLOCK_SIZE * 3, 0)
+    eng = OffloadEngine(fs, node="storage0", cache_blocks=64)
+    eng.register_stub("read", lambda io, blk, n: io.offload_read(blk, n))
+    ex = fs.stat("/a").extents
+
+    lease = fs.grant_lease(ex, [])
+    t1 = fs.stat("/a").mtime
+    eng.run_task("read", lease, ex[0].block, 3, mtime=t1)  # warm: 3 misses
+    fs.release_lease(lease)
+    assert eng.cache.stats.misses == 3 and eng.cache.stats.bypasses == 0
+    # initiator overwrites → all 3 cached blocks are stale
+    fs.write("/a", b"2" * BLOCK_SIZE * 3, 0)
+    lease = fs.grant_lease(ex, [])
+    t2 = fs.stat("/a").mtime
+    r = eng.run_task("read", lease, ex[0].block, 3, mtime=t2)
+    fs.release_lease(lease)
+    assert r == b"2" * BLOCK_SIZE * 3  # fresh data, not the stale cache
+    assert eng.cache.stats.bypasses == 3  # every stale block counted
+    # re-read at same mtime now hits (cache was refreshed by the bypass)
+    lease = fs.grant_lease(ex, [])
+    eng.run_task("read", lease, ex[0].block, 3, mtime=t2)
+    fs.release_lease(lease)
+    assert eng.cache.stats.hits == 3
+    assert eng.cache.stats.bypasses == 3  # unchanged
+
+
 def test_rejected_offload_runs_locally():
     from repro.core.admission import RejectAll
 

@@ -1,0 +1,180 @@
+"""Async/batched fabric semantics: future resolution, batch byte
+accounting, deterministic record replay order, error propagation."""
+import pickle
+import threading
+import time
+
+import pytest
+
+from repro.core.rpc import RpcError, RpcFabric, RpcRecord
+
+
+def make_fabric(**kw):
+    fab = RpcFabric(**kw)
+    fab.register("storage0", "echo", lambda x: x)
+    fab.register("storage0", "add", lambda a, b: a + b)
+    fab.register("storage0", "boom", lambda: (_ for _ in ()).throw(ValueError("kaput")))
+    return fab
+
+
+# ---------------------------------------------------------------- futures
+def test_future_resolution_and_result():
+    fab = make_fabric()
+    futs = [fab.call_async("init0", "storage0", "add", i, 10) for i in range(8)]
+    assert [f.result(5) for f in futs] == [i + 10 for i in range(8)]
+    assert all(f.done() for f in futs)
+    assert all(f.exception(0) is None for f in futs)
+
+
+def test_future_resolution_order_vs_record_order():
+    """Records land in SUBMISSION order even when handlers complete out of
+    order (worker interleaving must not perturb the replay trace)."""
+    fab = RpcFabric(workers=4)
+    release = threading.Event()
+
+    def slow(tag):
+        release.wait(5)
+        return tag
+
+    def fast(tag):
+        return tag
+
+    fab.register("s", "slow", slow)
+    fab.register("s", "fast", fast)
+    f_slow = fab.call_async("i", "s", "slow", "a")
+    f_fast = [fab.call_async("i", "s", "fast", t) for t in "bcd"]
+    for f in f_fast:
+        assert f.result(5) is not None  # fast ones complete first...
+    assert not f_slow.done()
+    assert fab.total_messages() == 0  # ...but nothing flushed past the gap
+    release.set()
+    assert f_slow.result(5) == "a"
+    fab.drain()
+    assert [r.method for r in fab.records] == ["slow", "fast", "fast", "fast"]
+
+
+def test_sync_and_async_interleave_deterministically():
+    fab = make_fabric()
+    fab.call_async("i", "storage0", "echo", 1).result(5)
+    fab.call("i", "storage0", "echo", 2)
+    fab.call_async("i", "storage0", "echo", 3).result(5)
+    fab.drain()
+    payloads = [r.req_bytes for r in fab.records]
+    assert len(payloads) == 3
+    assert [r.method for r in fab.records] == ["echo"] * 3
+
+
+# ------------------------------------------------------------------ batch
+def test_batch_byte_accounting_equals_individual_calls():
+    args_list = [((i, "x" * i), {"k": i}) for i in range(1, 9)]
+    fab_a = make_fabric()
+    for a, kw in args_list:
+        fab_a.call("init0", "storage0", "add", a[0], len(a[1]), **{})
+    # same payloads once more, kwargs included, via individual calls
+    fab_1 = make_fabric()
+    fab_n = make_fabric()
+    fab_1.register("storage0", "probe", lambda *a, **k: (a, sorted(k.items())))
+    fab_n.register("storage0", "probe", lambda *a, **k: (a, sorted(k.items())))
+    singles = [fab_1.call("init0", "storage0", "probe", *a, **kw)
+               for a, kw in args_list]
+    batched = fab_n.call_batch(
+        "init0", "storage0",
+        [("probe", a, kw) for a, kw in args_list],
+    )
+    assert batched == singles
+    fab_1.drain(), fab_n.drain()
+    # bytes identical, message count collapses to 1
+    assert fab_n.total_bytes() == fab_1.total_bytes()
+    assert fab_1.total_messages() == len(args_list)
+    assert fab_n.total_messages() == 1
+    rec = fab_n.records[0]
+    assert rec.n_calls == len(args_list)
+    assert rec.req_bytes == sum(r.req_bytes for r in fab_1.records)
+    assert rec.resp_bytes == sum(r.resp_bytes for r in fab_1.records)
+
+
+def test_batch_async_and_empty():
+    fab = make_fabric()
+    fut = fab.call_batch_async(
+        "i", "storage0", [("add", (1, 2), {}), ("echo", ("z",), {})]
+    )
+    assert fut.result(5) == [3, "z"]
+    assert fab.call_batch("i", "storage0", []) == []
+    empty = fab.call_batch_async("i", "storage0", [])
+    assert empty.result(1) == []
+    fab.drain()
+    assert fab.total_messages() == 1
+
+
+# ---------------------------------------------------------- record replay
+def test_records_replay_deterministic_across_runs():
+    """Same submissions → byte-identical record stream, run to run, with
+    async execution in between (the DES replays this trace)."""
+
+    def run():
+        fab = make_fabric()
+        futs = [fab.call_async("init0", "storage0", "add", i, i) for i in range(6)]
+        fab.call("init0", "storage0", "echo", "mid")
+        fab.call_batch("init0", "storage0",
+                       [("echo", (i,), {}) for i in range(4)])
+        for f in futs:
+            f.result(5)
+        fab.drain()
+        return [(r.src, r.dst, r.method, r.req_bytes, r.resp_bytes, r.n_calls)
+                for r in fab.records]
+
+    a, b = run(), run()
+    assert a == b
+    assert len(a) == 8  # 6 async + 1 sync + 1 batch
+    assert sum(n for *_, n in a) == 11
+
+
+def test_bytes_by_link_matches_records():
+    fab = make_fabric()
+    for i in range(5):
+        fab.call_async("init0", "storage0", "echo", i)
+    fab.drain()
+    total = sum(r.req_bytes + r.resp_bytes for r in fab.records)
+    assert fab.bytes_by_link[("init0", "storage0")] == total
+    assert fab.total_bytes() == total
+
+
+# ---------------------------------------------------------------- errors
+def test_error_propagation_through_futures():
+    fab = make_fabric()
+    ok = fab.call_async("i", "storage0", "echo", "fine")
+    bad = fab.call_async("i", "storage0", "boom")
+    missing = fab.call_async("i", "storage0", "nope")
+    assert ok.result(5) == "fine"
+    with pytest.raises(ValueError, match="kaput"):
+        bad.result(5)
+    assert isinstance(bad.exception(5), ValueError)
+    with pytest.raises(RpcError):
+        missing.result(5)
+    # errors must not wedge the deterministic flush cursor
+    after = fab.call_async("i", "storage0", "echo", "after")
+    assert after.result(5) == "after"
+    fab.drain()
+    # boom produced an (error) wire record; the missing handler did not
+    assert [r.method for r in fab.records] == ["echo", "boom", "echo"]
+
+
+def test_batch_error_aborts_and_propagates():
+    fab = make_fabric()
+    with pytest.raises(ValueError, match="kaput"):
+        fab.call_batch("i", "storage0", [
+            ("echo", (1,), {}), ("boom", (), {}), ("echo", (2,), {}),
+        ])
+    fab.drain()
+    assert fab.total_messages() == 1  # the aborted batch is still a message
+    # fabric remains usable
+    assert fab.call("i", "storage0", "echo", 7) == 7
+
+
+def test_sync_error_still_recorded():
+    fab = make_fabric()
+    with pytest.raises(ValueError):
+        fab.call("i", "storage0", "boom")
+    fab.drain()
+    assert len(fab.records) == 1 and fab.records[0].method == "boom"
+    assert fab.records[0].resp_bytes == len(pickle.dumps(repr(ValueError("kaput"))))
