@@ -1,13 +1,28 @@
-"""Shared helpers: CSV emission + claim checks printed as derived rows."""
+"""Shared helpers: CSV emission + claim checks printed as derived rows.
+
+``benchmarks.run`` points ``OUT`` at a file to mirror every row (the CI
+artifact) and reads ``FAILURES`` to turn failed claims into a nonzero exit
+code — pipeline-safe, unlike shell ``! grep`` post-processing.
+"""
 from __future__ import annotations
 
-import sys
+from typing import Optional, TextIO
+
+OUT: Optional[TextIO] = None  # mirror target for every emitted row
+FAILURES = 0  # claim checks that failed since process start
 
 
 def emit(name: str, value, derived: str = ""):
-    print(f"{name},{value},{derived}")
+    line = f"{name},{value},{derived}"
+    print(line)
+    if OUT is not None:
+        OUT.write(line + "\n")
+        OUT.flush()
 
 
 def check(name: str, cond: bool, detail: str = ""):
+    global FAILURES
+    if not cond:
+        FAILURES += 1
     emit(f"claim/{name}", "PASS" if cond else "FAIL", detail)
     return cond

@@ -1,11 +1,20 @@
 """Benchmark harness: one module per paper figure (+ the roofline report).
 Prints ``name,value,derived`` CSV rows; claim checks appear as
-``claim/<name>,PASS|FAIL``. Usage: PYTHONPATH=src python -m benchmarks.run
-[--smoke]  (--smoke runs the fast subset only — the CI job).
+``claim/<name>,PASS|FAIL``. Usage::
+
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [--out bench.csv]
+
+``--smoke`` runs the fast subset only (the CI job). ``--out`` mirrors every
+CSV row to a file (uploaded as a CI artifact). The exit code is the number
+of failed claims plus crashed modules — CI gates on it directly instead of
+grepping the output (shell ``! grep`` masks pipeline errors under
+``pipefail``).
 """
 import importlib
 import sys
 import time
+
+from benchmarks import common
 
 MODULES = [
     "benchmarks.fig2_fs_overhead",
@@ -18,12 +27,14 @@ MODULES = [
     "benchmarks.fig12_cache_timeline",
     "benchmarks.fig13_cache_pollution",
     "benchmarks.fig14_sharded_plane",
+    "benchmarks.fig15_async_wal",
     "benchmarks.roofline_report",
 ]
 
 SMOKE_MODULES = [
     "benchmarks.fig2_fs_overhead",
     "benchmarks.fig14_sharded_plane",
+    "benchmarks.fig15_async_wal",
     "benchmarks.roofline_report",
 ]
 
@@ -31,19 +42,30 @@ SMOKE_MODULES = [
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     modules = SMOKE_MODULES if "--smoke" in argv else MODULES
+    if "--out" in argv:
+        i = argv.index("--out")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+            print("usage: benchmarks.run [--smoke] [--out FILE]",
+                  file=sys.stderr)
+            return 2
+        common.OUT = open(argv[i + 1], "w")
     t0 = time.time()
-    failures = 0
+    crashes = 0
     for mod in modules:
         print(f"# === {mod} ===", flush=True)
         t = time.time()
         try:
             importlib.import_module(mod).main()
         except Exception as e:  # noqa: BLE001
-            print(f"claim/{mod}/crashed,FAIL,{type(e).__name__}: {e}")
-            failures += 1
+            common.emit(f"claim/{mod}/crashed", "FAIL",
+                        f"{type(e).__name__}: {e}")
+            crashes += 1
         print(f"# {mod} took {time.time()-t:.1f}s", flush=True)
-    print(f"# total {time.time()-t0:.1f}s")
-    return failures
+    print(f"# total {time.time()-t0:.1f}s "
+          f"({common.FAILURES} failed claims, {crashes} crashes)")
+    if common.OUT is not None:
+        common.OUT.close()
+    return min(crashes + common.FAILURES, 125)
 
 
 if __name__ == "__main__":

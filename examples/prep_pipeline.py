@@ -8,7 +8,7 @@ import time
 
 sys.path.insert(0, "src")
 
-from repro.core import BlockDevice, CPUThreshold, OffloadFS, RpcFabric, TokenRing
+from repro.core import BlockDevice, OffloadFS, RpcFabric, TokenRing
 from repro.core.engine import OffloadEngine
 from repro.core.offloader import TaskOffloader, serve_engine
 from repro.data.offload_prep import OffloadPrep, stub_preprocess

@@ -9,7 +9,6 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.config import get_config
 from repro.models.model import build_model

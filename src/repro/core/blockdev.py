@@ -8,8 +8,8 @@ performance layer; the functional layer is deterministic and thread-safe.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
 
 BLOCK_SIZE = 4096
 

@@ -15,8 +15,8 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Set, Tuple
 
 from repro.core.blockdev import BLOCK_SIZE
 from repro.core.fs import Lease, OffloadFS
@@ -126,6 +126,7 @@ class OffloadEngine:
         self._stubs: Dict[str, Callable] = {}
         self.busy_ns = 0  # accumulated simulated work units (DES hook)
         self.tasks_run = 0
+        self.wal_segments = 0  # async WAL segments landed near-data
         # bounded work queue: with many initiators submitting concurrently,
         # admission caps what the policy lets in, and this caps what the
         # engine lets RUN — excess submissions block (backpressure) so the

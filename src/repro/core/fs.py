@@ -13,8 +13,9 @@ fallocate, stat) happen only on the initiator.
 from __future__ import annotations
 
 import itertools
+import struct
 import threading
-import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -45,7 +46,174 @@ class LeaseViolation(Exception):
     pass
 
 
-SB_BLOCKS = 64  # superblock area (metadata persistence), 256 KiB
+SB_BLOCKS = 64  # superblock area (metadata + lease journal), 256 KiB
+SB_META_BLOCKS = 48  # metadata pickle lives in blocks [0, 48)
+SB_JOURNAL_BLOCK = SB_META_BLOCKS  # lease journal lives in blocks [48, 64)
+SB_JOURNAL_BLOCKS = SB_BLOCKS - SB_META_BLOCKS
+
+_JHDR = struct.Struct("<HI")  # record length, crc32(payload)
+_JREC = struct.Struct("<BII")  # op, task_id, n_runs
+_JRUN = struct.Struct("<II")  # block, nblocks
+_J_GRANT, _J_RELEASE = 1, 2
+
+
+def _coalesce_runs(blocks) -> List[Tuple[int, int]]:
+    """Compress a block set into sorted (start, nblocks) runs."""
+    runs: List[Tuple[int, int]] = []
+    for b in sorted(blocks):
+        if runs and runs[-1][0] + runs[-1][1] == b:
+            runs[-1] = (runs[-1][0], runs[-1][1] + 1)
+        else:
+            runs.append((b, 1))
+    return runs
+
+
+class LeaseJournal:
+    """Crash-recoverable journal of write-lease grants/releases, persisted in
+    the superblock area (blocks [SB_JOURNAL_BLOCK, SB_BLOCKS)).
+
+    Record format: ``[len u16 | crc32 u32 | payload]`` with payload
+    ``[op u8 | task_id u32 | n_runs u32 | (block u32, nblocks u32)*]``.
+    Appends are durable immediately (only the dirty tail blocks are
+    rewritten). Replay stops at the first record whose crc fails, whose
+    length runs past the journaled area, or whose payload is malformed —
+    torn-tail tolerance matching the superblock's "last commit wins" rule.
+
+    When the area fills up the journal compacts itself: it rewrites only the
+    still-outstanding grants (and zeroes the tail so stale records can never
+    resurrect on a later mount).
+    """
+
+    CAPACITY = SB_JOURNAL_BLOCKS * BLOCK_SIZE
+
+    def __init__(self, dev: BlockDevice, *, node: str = "initiator0"):
+        self.dev = dev
+        self.node = node
+        self._buf = bytearray()
+        self._outstanding: Dict[int, Tuple[Tuple[int, int], ...]] = {}
+        self._wiped = False  # fresh journal: zero stale on-device tail once
+        self.max_task_id = 0
+        self.appends = 0
+        self.compactions = 0
+        self.torn_records = 0
+
+    # ------------------------------------------------------------ encoding
+    @staticmethod
+    def _encode(op: int, task_id: int, runs: Sequence[Tuple[int, int]]) -> bytes:
+        payload = _JREC.pack(op, task_id, len(runs)) + b"".join(
+            _JRUN.pack(b, n) for b, n in runs
+        )
+        if len(payload) > 0xFFFF:
+            raise IOError(
+                f"lease journal record too large ({len(runs)} runs): "
+                "write set too fragmented"
+            )
+        return _JHDR.pack(len(payload), zlib.crc32(payload)) + payload
+
+    # ------------------------------------------------------------- appends
+    def append_grant(self, task_id: int, blocks) -> None:
+        runs = _coalesce_runs(blocks)
+        rec = self._encode(_J_GRANT, task_id, runs)  # may raise: no state yet
+        self._outstanding[task_id] = tuple(runs)
+        self.max_task_id = max(self.max_task_id, task_id)
+        try:
+            self._append(rec)
+        except BaseException:
+            # journal and fs state must agree: an unjournaled grant is no
+            # grant (the caller rolls its lease maps back too)
+            del self._outstanding[task_id]
+            raise
+
+    def append_release(self, task_id: int) -> None:
+        self._outstanding.pop(task_id, None)
+        self.max_task_id = max(self.max_task_id, task_id)
+        self._append(self._encode(_J_RELEASE, task_id, ()))
+
+    def drop_outstanding(self, task_id: int) -> None:
+        """Forget a grant without journaling a release (orphan reclaim: one
+        compact() afterwards rewrites the whole area anyway)."""
+        self._outstanding.pop(task_id, None)
+
+    def _append(self, rec: bytes) -> None:
+        if len(self._buf) + len(rec) > self.CAPACITY:
+            self._compact()
+            if len(self._buf) + len(rec) > self.CAPACITY:
+                raise IOError("lease journal overflow (too many live leases)")
+        start = len(self._buf)
+        self._buf += rec
+        self.appends += 1
+        if not self._wiped:
+            # first write on a fresh volume: zero the whole area so stale
+            # records from a previous filesystem generation can't resurrect
+            self._write_all()
+            return
+        first = start // BLOCK_SIZE
+        last = (len(self._buf) + BLOCK_SIZE - 1) // BLOCK_SIZE
+        chunk = bytes(self._buf[first * BLOCK_SIZE : last * BLOCK_SIZE])
+        self.dev.write_blocks(SB_JOURNAL_BLOCK + first, chunk, node=self.node)
+        if len(self._buf) % BLOCK_SIZE == 0 and last < SB_JOURNAL_BLOCKS:
+            # zero-terminate: replay must never run into stale bytes that a
+            # previous journal generation left in the next block
+            self.dev.write_blocks(SB_JOURNAL_BLOCK + last,
+                                  b"\x00" * BLOCK_SIZE, node=self.node)
+
+    def _write_all(self) -> None:
+        blob = bytes(self._buf).ljust(self.CAPACITY, b"\x00")
+        self.dev.write_blocks(SB_JOURNAL_BLOCK, blob, node=self.node)
+        self._wiped = True
+
+    def _compact(self) -> None:
+        self._buf = bytearray()
+        for tid, runs in sorted(self._outstanding.items()):
+            self._buf += self._encode(_J_GRANT, tid, runs)
+        self._write_all()
+        self.compactions += 1
+
+    def compact(self) -> None:
+        """Rewrite the journal keeping only outstanding grants."""
+        self._compact()
+
+    # -------------------------------------------------------------- replay
+    def replay(self) -> Dict[int, Tuple[Tuple[int, int], ...]]:
+        """Load the on-device journal; returns {task_id: write-block runs}
+        for every grant without a matching release (the orphans)."""
+        raw = self.dev.read_blocks(SB_JOURNAL_BLOCK, SB_JOURNAL_BLOCKS,
+                                   node=self.node)
+        out: Dict[int, Tuple[Tuple[int, int], ...]] = {}
+        off = 0
+        while off + _JHDR.size <= len(raw):
+            ln, crc = _JHDR.unpack_from(raw, off)
+            if ln == 0:  # zeroed tail: end of journal
+                break
+            payload = raw[off + _JHDR.size : off + _JHDR.size + ln]
+            if len(payload) < ln or zlib.crc32(payload) != crc:
+                self.torn_records += 1
+                break  # torn tail: committed prefix wins
+            if ln < _JREC.size:
+                self.torn_records += 1
+                break
+            op, tid, n_runs = _JREC.unpack_from(payload, 0)
+            if ln != _JREC.size + n_runs * _JRUN.size or op not in (
+                _J_GRANT, _J_RELEASE
+            ):
+                self.torn_records += 1
+                break
+            runs = tuple(
+                _JRUN.unpack_from(payload, _JREC.size + i * _JRUN.size)
+                for i in range(n_runs)
+            )
+            if op == _J_GRANT:
+                out[tid] = runs
+            else:
+                out.pop(tid, None)
+            self.max_task_id = max(self.max_task_id, tid)
+            off += _JHDR.size + ln
+        self._buf = bytearray(raw[:off])
+        self._outstanding = dict(out)
+        # normalize the on-device state: keep the committed prefix, zero the
+        # rest (drops torn-record bytes so they can't be re-parsed later)
+        self._write_all()
+        return out
 
 
 class OffloadFS:
@@ -64,6 +232,11 @@ class OffloadFS:
         self._leased_blocks: Dict[int, int] = {}  # block -> task_id
         self._lock = threading.RLock()
         self._clock = 0.0
+        # crash-recoverable lease journal (superblock area): every WRITE
+        # lease grant/release is journaled so a re-mounted initiator can
+        # reclaim orphaned leases without scanning
+        self.lease_journal = LeaseJournal(dev, node=node)
+        self._orphans: Dict[int, Lease] = {}  # journaled leases from a crash
 
     # --------------------------------------------------------------- clock
     def _tick(self) -> float:
@@ -91,10 +264,16 @@ class OffloadFS:
             )
             hdr = len(blob).to_bytes(8, "little") + zlib.crc32(blob).to_bytes(4, "little")
             buf = hdr + blob
-            cap = SB_BLOCKS * BLOCK_SIZE
+            cap = SB_META_BLOCKS * BLOCK_SIZE
             if len(buf) > cap:
                 raise IOError(f"superblock overflow ({len(buf)} > {cap})")
             self.dev.write_blocks(0, buf, node=self.node)
+            if not self.lease_journal._wiped:
+                # first metadata persist of a FRESH (mkfs) filesystem: zero
+                # the journal area now, or a crash before the first write
+                # lease would resurrect the previous generation's journal
+                # on mount and quiesce blocks it never leased
+                self.lease_journal._write_all()
 
     @classmethod
     def mount(cls, dev: BlockDevice, *, node: str = "initiator0") -> "OffloadFS":
@@ -102,13 +281,16 @@ class OffloadFS:
         import zlib
 
         fs = cls(dev, node=node)
-        raw = dev.read_blocks(0, SB_BLOCKS, node=node)
+        raw = dev.read_blocks(0, SB_META_BLOCKS, node=node)
         size = int.from_bytes(raw[:8], "little")
-        if size == 0 or size > SB_BLOCKS * BLOCK_SIZE:
+        if size == 0 or size > SB_META_BLOCKS * BLOCK_SIZE:
+            fs._replay_lease_journal()
             return fs  # fresh volume
         blob = raw[12 : 12 + size]
         if zlib.crc32(blob) != int.from_bytes(raw[8:12], "little"):
-            return fs  # torn superblock: fresh mount (last commit wins upstream)
+            # torn superblock: fresh mount (last commit wins upstream)
+            fs._replay_lease_journal()
+            return fs
         meta = _pkl.loads(blob)
         fs._names = dict(meta["names"])
         fs._clock = meta["clock"]
@@ -125,7 +307,51 @@ class OffloadFS:
         for e in sorted(used, key=lambda e: e.block):
             # carve out of the free list by allocating exactly that run
             fs.extmgr.carve(e.block, e.nblocks)
+        fs._replay_lease_journal()
         return fs
+
+    def _replay_lease_journal(self) -> None:
+        """Rebuild orphaned write leases from the journal (no scanning): the
+        blocks stay quiesced — a crashed-away target task might still be
+        mid-write — until ``reclaim_orphans`` fences them back."""
+        with self._lock:
+            for tid, runs in self.lease_journal.replay().items():
+                wb = frozenset(
+                    b for blk, n in runs for b in range(blk, blk + n)
+                )
+                lease = Lease(tid, frozenset(), wb)
+                self._leases[tid] = lease
+                self._orphans[tid] = lease
+                for b in wb:
+                    self._leased_blocks[b] = tid
+            self._task_counter = itertools.count(
+                self.lease_journal.max_task_id + 1
+            )
+
+    def orphan_leases(self) -> List[Lease]:
+        """Write leases journaled by a previous incarnation, not yet fenced."""
+        with self._lock:
+            return list(self._orphans.values())
+
+    def reclaim_orphans(self) -> List[int]:
+        """Fence and reclaim every orphaned write lease (the grantee died
+        with the previous initiator process). Returns the reclaimed task
+        ids; afterwards the blocks are writable by the initiator again."""
+        with self._lock:
+            tids = sorted(self._orphans)
+            for tid in tids:
+                lease = self._orphans.pop(tid)
+                lease.done = True
+                self._leases.pop(tid, None)
+                for b in lease.write_blocks:
+                    if self._leased_blocks.get(b) == tid:
+                        del self._leased_blocks[b]
+                # no per-orphan release record: the single compact() below
+                # rewrites the area with only the still-outstanding grants
+                self.lease_journal.drop_outstanding(tid)
+            if tids:
+                self.lease_journal.compact()
+            return tids
 
     # ------------------------------------------------------------ metadata
     def create(self, path: str) -> int:
@@ -189,6 +415,11 @@ class OffloadFS:
                     keep.append(Extent(e.file_offset, e.block, cut))
                     drop.append(Extent(e.file_offset + cut, e.block + cut, e.nblocks - cut))
             self.extmgr.free(drop)
+            for e in drop:
+                # trim like delete() does: freed blocks must read as zeros,
+                # or a crashed WAL that reused them could replay the stale
+                # record-encoded bytes as committed data on reopen
+                self.dev.trim(e.block, e.nblocks)
             inode.extents = keep
             inode.size = min(inode.size, size)
             inode.mtime = self._tick()
@@ -224,16 +455,9 @@ class OffloadFS:
     def write(self, path: str, data: bytes, offset: int = 0) -> int:
         """Initiator-side write (foreground I/O — e.g. WAL, MANIFEST).
         Block-aligned offsets only (the LSM layer writes aligned)."""
-        if offset % BLOCK_SIZE:
-            raise ValueError("unaligned write")
         with self._lock:
-            inode = self._inodes[self._names[path]]
-            end = offset + len(data)
-            self.fallocate(path, max(inode.size, end))
-            runs = list(self._extent_blocks(inode, offset, len(data)))
-            self._check_not_leased(
-                b for blk, n in runs for b in range(blk, blk + n)
-            )
+            # metadata half is shared with the remote-data path
+            runs = self.prepare_write(path, offset, len(data))
             pos = 0
             for blk, n in runs:
                 chunk = data[pos : pos + n * BLOCK_SIZE]
@@ -241,9 +465,34 @@ class OffloadFS:
                 pos += n * BLOCK_SIZE
                 if pos >= len(data):
                     break
+            return len(data)
+
+    def prepare_write(self, path: str, offset: int, length: int, *,
+                      lease: bool = False):
+        """Metadata half of a write whose DATA half lands remotely (async
+        WAL segment shipping): allocate covering blocks, bump size/mtime,
+        and return the physical runs. With ``lease=True`` a write lease over
+        exactly those runs is granted atomically (same lock hold) and
+        ``(runs, lease)`` is returned — the shipped segment's authorization.
+        """
+        if offset % BLOCK_SIZE:
+            raise ValueError("unaligned write")
+        with self._lock:
+            inode = self._inodes[self._names[path]]
+            end = offset + length
+            self.fallocate(path, max(inode.size, end))
+            runs = list(self._extent_blocks(inode, offset, length))
+            self._check_not_leased(
+                b for blk, n in runs for b in range(blk, blk + n)
+            )
             inode.size = max(inode.size, end)
             inode.mtime = self._tick()
-            return len(data)
+            if not lease:
+                return runs
+            grant = self.grant_lease(
+                (), [Extent(0, blk, n) for blk, n in runs]
+            )
+            return runs, grant
 
     def read(self, path: str, offset: int = 0, length: Optional[int] = None) -> bytes:
         with self._lock:
@@ -264,10 +513,8 @@ class OffloadFS:
             first_blk = offset // BLOCK_SIZE
             skip = offset - first_blk * BLOCK_SIZE
             out = []
-            got = 0
             for blk, n in self._extent_blocks(inode, offset, length):
                 out.append(self.dev.read_blocks(blk, n, node=self.node))
-                got += n * BLOCK_SIZE
             buf = b"".join(out)
             return buf[skip : skip + length]
 
@@ -298,15 +545,30 @@ class OffloadFS:
             for b in wb:
                 self._leased_blocks[b] = tid
             self._leases[tid] = lease
+            if wb:
+                # read-only leases die harmlessly with the process; WRITE
+                # leases must be journaled so a re-mount can reclaim them
+                try:
+                    self.lease_journal.append_grant(tid, wb)
+                except BaseException:
+                    # unjournaled grant is no grant: roll the maps back so
+                    # the blocks don't stay quiesced with no Lease to free
+                    for b in wb:
+                        if self._leased_blocks.get(b) == tid:
+                            del self._leased_blocks[b]
+                    self._leases.pop(tid, None)
+                    raise
             return lease
 
     def release_lease(self, lease: Lease) -> None:
         with self._lock:
             lease.done = True
+            existed = self._leases.pop(lease.task_id, None) is not None
             for b in lease.write_blocks:
                 if self._leased_blocks.get(b) == lease.task_id:
                     del self._leased_blocks[b]
-            self._leases.pop(lease.task_id, None)
+            if existed and lease.write_blocks:
+                self.lease_journal.append_release(lease.task_id)
 
     # ---------------------------------------------- target-side block APIs
     # (called by the Offload Engine on behalf of an authorized task; the

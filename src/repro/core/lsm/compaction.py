@@ -7,7 +7,7 @@ crosses the wire (initiator-centric block management).
 from __future__ import annotations
 
 import heapq
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Iterable, List, Tuple
 
 from repro.core.blockdev import BLOCK_SIZE
 from repro.core.lsm.memtable import TOMBSTONE

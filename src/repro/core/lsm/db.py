@@ -20,16 +20,16 @@ from __future__ import annotations
 
 import itertools
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.blockdev import BLOCK_SIZE
-from repro.core.fs import Extent, OffloadFS
+from repro.core.fs import OffloadFS
 from repro.core.lsm import compaction as C
 from repro.core.lsm.manifest import Manifest
 from repro.core.lsm.memtable import TOMBSTONE, MemTable
 from repro.core.lsm.sstable import SSTableReader, TableMeta, build_bytes
-from repro.core.lsm.wal import WriteAheadLog
+from repro.core.lsm.wal import DEFAULT_SEGMENT_BYTES, WalShipper, WriteAheadLog
 from repro.core.offloader import TaskOffloader
 
 
@@ -46,6 +46,12 @@ class DBConfig:
     offload_levels: int = 99  # compactions with source level < this offload
     offload_flush: bool = True
     sync_wal: bool = False
+    # async durability plane: seal WAL segments and ship them to shard
+    # targets (RpcFabric.call_async); foreground puts only touch the
+    # in-memory tail and durability is tracked by wal.durable_lsn
+    async_wal: bool = False
+    wal_segment_bytes: int = DEFAULT_SEGMENT_BYTES
+    wal_max_inflight: int = 8
     table_cache_bytes: int = 8 * 1024 * 1024
     cache_compaction_reads: bool = True  # False = "dio-compaction" (Fig. 12)
     peer_target: Optional[str] = None  # offload to a peer initiator instead
@@ -105,16 +111,28 @@ class OffloadDB:
         self.stats = {"stall_events": 0, "flushes": 0, "compactions": 0,
                       "wal_bytes": 0, "flush_rpc_payload": 0}
         self.read_stats = {"mem": 0, "imm": 0, "l0": 0, "ln": 0, "absent": 0}
+        self.orphans_reclaimed: List[int] = []
+        self.wal_shipper = self._make_shipper()
         self._new_wal()
         if register_stubs and offloader is not None:
             offloader.register_local_stub("compact", C.stub_compact)
             offloader.register_local_stub("log_recycle", C.stub_log_recycle)
 
     # ------------------------------------------------------------ WAL mgmt
+    def _make_shipper(self) -> Optional[WalShipper]:
+        if not self.cfg.async_wal or self.off is None or not self.off.targets:
+            return None
+        return WalShipper(self.fs, self.off.fabric, self.off.targets,
+                          node=self.fs.node)
+
     def _new_wal(self):
         g = next(self._gen)
         path = f"/wal/{g:08d}"
-        self.wal = WriteAheadLog(self.fs, path, sync=self.cfg.sync_wal)
+        self.wal = WriteAheadLog(
+            self.fs, path, sync=self.cfg.sync_wal, shipper=self.wal_shipper,
+            segment_bytes=self.cfg.wal_segment_bytes,
+            max_inflight=self.cfg.wal_max_inflight,
+        )
         self.wal_gen = g
         self.mem = MemTable(seed=g)
         self.manifest.append({"kind": "wal", "gen": g, "path": path})
@@ -619,11 +637,19 @@ class OffloadDB:
 
     @classmethod
     def recover(cls, fs: OffloadFS, offloader=None, cfg: DBConfig = DBConfig()):
-        """Rebuild from MANIFEST + WAL replay after a crash/restart."""
+        """Rebuild from MANIFEST + WAL replay after a crash/restart.
+
+        Recovery consults the lease journal first: write leases orphaned by
+        the crash (in-flight WAL segments, submit_many flush/compaction
+        grants) are fenced and reclaimed WITHOUT scanning, so the replay
+        below can read those blocks. WAL replay then trusts only the intact
+        device prefix — with async shipping the durability watermark at
+        crash time, not the logical tail."""
         db = cls.__new__(cls)
         db.fs = fs
         db.off = offloader
         db.cfg = cfg
+        db.orphans_reclaimed = fs.reclaim_orphans()
         db.manifest = Manifest(fs)
         db.tables = {}
         db.levels = {i: [] for i in range(cfg.max_level + 1)}
@@ -663,26 +689,30 @@ class OffloadDB:
         # orphan reclamation: tmp files never committed
         for path in fs.listdir("/sst/tmp-"):
             fs.delete(path)
-        # rebuild deferred L0s from their WALs (oldest first)
+        db.wal_shipper = db._make_shipper()
+        # rebuild deferred L0s from their WALs (oldest first); reopen()
+        # keeps only the intact record prefix (torn tails dropped)
         for gen in sorted(live_logs):
             path = live_logs[gen]
             if not fs.exists(path):
                 continue
-            wal = WriteAheadLog(fs, path)
-            ino = fs.stat(path)
-            wal._size = wal._flushed = ino.size
+            wal, records = WriteAheadLog.reopen(fs, path)
             mem = MemTable(seed=gen)
-            for key, val, off in wal.replay():
+            for key, val, off in records:
                 mem.put(key, val, off)
             db.imm.append({"gen": gen, "mem": mem, "wal": wal, "count": len(mem)})
-        # active WAL → live memtable
+        # active WAL → live memtable: replay stops at the crash-time
+        # durability watermark (async shipping allocates blocks ahead of the
+        # completed segment prefix; the torn tail past it is dropped)
         if active_path and fs.exists(active_path):
-            db.wal = WriteAheadLog(fs, active_path, sync=cfg.sync_wal)
-            ino = fs.stat(active_path)
-            db.wal._size = db.wal._flushed = ino.size
+            db.wal, records = WriteAheadLog.reopen(
+                fs, active_path, sync=cfg.sync_wal, shipper=db.wal_shipper,
+                segment_bytes=cfg.wal_segment_bytes,
+                max_inflight=cfg.wal_max_inflight,
+            )
             db.wal_gen = active_gen
             db.mem = MemTable(seed=active_gen)
-            for key, val, off in db.wal.replay():
+            for key, val, off in records:
                 db.mem.put(key, val, off)
         else:
             db._new_wal()

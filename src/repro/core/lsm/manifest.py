@@ -14,7 +14,7 @@ from __future__ import annotations
 import json
 import struct
 import zlib
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Iterable
 
 from repro.core.fs import OffloadFS
 

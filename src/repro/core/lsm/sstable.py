@@ -13,10 +13,10 @@ from __future__ import annotations
 import struct
 import zlib
 from bisect import bisect_left
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Iterable, List, Optional, Tuple
 
-from repro.core.lsm.wal import _HDR, decode_record, encode_record
+from repro.core.lsm.wal import decode_record, encode_record
 
 _FOOTER = struct.Struct("<QQIHH")  # index_off, n, crc, min_len, max_len
 MAGIC = b"OFS1"

@@ -32,7 +32,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from repro.core.engine import EngineIO, OffloadEngine
+from repro.core.blockdev import BLOCK_SIZE
+from repro.core.engine import OffloadEngine
 from repro.core.fs import Extent, Lease, OffloadFS
 from repro.core.rpc import RpcFabric, RpcFuture
 
@@ -394,10 +395,27 @@ def serve_engine(engine: OffloadEngine, fabric: RpcFabric, policy,
             policy.complete(initiator)
         return ("ok", result)
 
+    def wal_append(lease_wire, runs, payload):
+        """Near-data durable write of a sealed WAL segment (async WAL
+        shipping). Raw block I/O under the segment's write lease — NOT an
+        admitted task: durability has no 'run locally instead' fallback, so
+        admission never rejects it."""
+        lease = _lease(lease_wire)
+        pos = 0
+        for blk, cnt in runs:
+            chunk = payload[pos : pos + cnt * BLOCK_SIZE]
+            if not chunk:
+                break
+            engine.fs.authorized_write(lease, blk, chunk, node=n)
+            pos += cnt * BLOCK_SIZE
+        engine.wal_segments += 1
+        return len(payload)
+
     fabric.register(n, "admit", admit)
     fabric.register(n, "complete", complete)
     fabric.register(n, "run_task", run_task)
     fabric.register(n, "submit_task", submit_task)
+    fabric.register(n, "wal_append", wal_append)
 
 
 def serve_engines(engines: Sequence[OffloadEngine], fabric: RpcFabric,

@@ -19,7 +19,7 @@ from __future__ import annotations
 import pickle
 import queue
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 

@@ -13,7 +13,7 @@ OpenImages subset the paper uses.
 from __future__ import annotations
 
 import struct
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -16,7 +16,6 @@ corpus sizes (≤ 512²·f32 ≈ 1 MiB).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -21,9 +21,8 @@ Sharding strategies (see DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-import math
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import SHAPE_CELLS, ModelConfig, ShapeCell, get_config
 from repro.models.model import Model, build_model
-from repro.models.transformer import n_periods, period_layout
+from repro.models.transformer import n_periods
 from repro.sharding import ShardingRules, make_rules, use_rules
 from repro.train import optim
 from repro.train.step import make_train_step

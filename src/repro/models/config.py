@@ -1,7 +1,7 @@
 """Model/run configuration dataclasses + arch registry."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp

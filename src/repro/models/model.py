@@ -228,7 +228,6 @@ def chunked_lm_loss(
     """Head + cross-entropy over sequence chunks, each chunk rematerialized:
     the (B, chunk, V) logits exist only transiently instead of a full
     (B, S, V) buffer (the dominant train-step activation for big vocabs)."""
-    cfg = model.cfg
     B, S, D = x.shape
     if mask is None:
         mask = jnp.ones((B, S), jnp.float32)

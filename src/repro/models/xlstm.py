@@ -10,7 +10,6 @@ weights) — lax.scan over time. Scan-body FLOPs are declared to
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,7 @@
 tiny batched serving driver used by examples/serving.py."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

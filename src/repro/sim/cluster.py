@@ -14,8 +14,8 @@ claims; EXPERIMENTS.md records per-figure deltas):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
 from repro.sim.des import Resource, Sim
 
@@ -39,6 +39,7 @@ class TestbedSpec:
     merge_rate: float = 150e6  # bytes/s/core merge-sort
     preprocess_rate: float = 25.0  # images/s/core
     kv_cpu_per_op: float = 12e-6  # initiator CPU per KV op (s)
+    lease_replay_cpu: float = 2e-6  # per journaled lease record on re-mount
 
 
 TESTBED = TestbedSpec()
@@ -140,3 +141,22 @@ class Cluster:
         still flow through both link FIFOs."""
         yield ("delay", self.spec.rpc_rtt + max(0, n_msgs - 1) * self.spec.rpc_dispatch)
         yield from self.net_transfer(initiator, nbytes, target=target)
+
+    def wal_ship(self, initiator: int, nbytes: float, *, target: int = 0):
+        """Async WAL segment shipping: one RPC carries the sealed segment to
+        the target, which lands it near-data (SPDK direct — the write skips
+        the PoseidonOS reactor crossing that initiator-volume I/O pays).
+        Runs as a background process; foreground puts never wait on it."""
+        yield ("delay", self.spec.rpc_rtt)
+        yield from self.net_transfer(initiator, nbytes, target=target)
+        yield ("use", self.nvme_w_t[target], nbytes)
+
+    def crash_remount(self, initiator: int, *, journal_records: int = 0,
+                      meta_bytes: float = 256 * 1024, target: int = 0):
+        """Initiator crash/re-mount: re-read the superblock area (metadata
+        pickle + lease journal) from the volume and replay the journal to
+        fence orphaned write leases — metadata-only work, no data scanning,
+        which is the whole point of journaling the leases."""
+        yield from self.storage_read(initiator, meta_bytes, target=target)
+        yield ("use", self.cpu_i[initiator],
+               journal_records * self.spec.lease_replay_cpu)

@@ -22,11 +22,11 @@ Mechanics (why the paper's effects emerge here):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
 from repro.core.admission import AcceptAll, AdmissionPolicy
-from repro.sim.cluster import GB, Cluster, TestbedSpec, TESTBED
+from repro.sim.cluster import Cluster, TestbedSpec, TESTBED
 from repro.sim.des import Sim
 
 MB = 1e6
@@ -58,6 +58,10 @@ class KVParams:
     offload_cache: bool = False
     l0_cache: bool = False
     sync_wal: bool = False
+    # async WAL shipping: foreground puts only touch the in-memory tail;
+    # sealed segments ship to the storage node as background processes
+    async_wal: bool = False
+    wal_segment_bytes: float = 64 * 1024
     peer: bool = False
     read_hit_ratio: float = 0.6
     read_amp: float = 2.0
@@ -122,13 +126,13 @@ def run_kv(params: KVParams, *, instances: int = 1,
         "net_bytes": 0.0,
         "inflight_storage_cores": 0,
         "latencies": [],
+        "wal_fill": [0.0] * instances,
     }
     cpu_probe = lambda: state["inflight_storage_cores"] / spec.storage_cores
     if policy is None or isinstance(policy, str):
         policy = make_policy(policy, sim, cpu_probe)
 
     sysname = params.system
-    is_cluster = sysname in ("ocfs2", "gfs2")
     j_per_op = JOURNAL_PER_OP[sysname]
     two_writers = params.offload_levels > 0 or params.offload_flush or instances > 1
     rec = params.key_bytes + params.value_bytes
@@ -255,12 +259,22 @@ def run_kv(params: KVParams, *, instances: int = 1,
             if sysname == "ocfs2" and two_writers:
                 yield ("use", dirlock, n * 0.01)  # fg share of dir-lock churn
             if nw:
-                if params.sync_wal:
-                    yield ("delay", nw * spec.rpc_rtt)
                 if j_per_mb:
                     yield ("use", journals[i], nw * rec / MB * j_per_mb)
-                yield from cl.storage_write(i, nw * rec)
-                state["net_bytes"] += nw * rec
+                if params.async_wal:
+                    # appends are memory-only; sealed segments ship in the
+                    # background (completion-ordered watermark off the
+                    # foreground path)
+                    state["wal_fill"][i] += nw * rec
+                    while state["wal_fill"][i] >= params.wal_segment_bytes:
+                        state["wal_fill"][i] -= params.wal_segment_bytes
+                        sim.spawn(cl.wal_ship(i, params.wal_segment_bytes))
+                        state["net_bytes"] += params.wal_segment_bytes
+                else:
+                    if params.sync_wal:
+                        yield ("delay", nw * spec.rpc_rtt)
+                    yield from cl.storage_write(i, nw * rec)
+                    state["net_bytes"] += nw * rec
                 fill[i] += nw * rec * 1.05
             if nr:
                 misses = int(nr * (1 - params.read_hit_ratio))

@@ -11,9 +11,8 @@ minibatch is max(local share, offloaded shares) — the paper's knee at
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Optional
 
-from repro.core.admission import AcceptAll, AdmissionPolicy
 from repro.sim.cluster import Cluster, TestbedSpec, TESTBED
 from repro.sim.des import Sim
 from repro.sim.kvmodel import make_policy

@@ -7,7 +7,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.model import Model, lm_loss
+from repro.models.model import Model
 from repro.train.optim import Optimizer, global_norm
 
 

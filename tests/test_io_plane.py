@@ -3,7 +3,6 @@ DES determinism, pipeline resumability."""
 import random
 
 import numpy as np
-import pytest
 
 from repro.core import (
     AcceptAll, BlockDevice, CPUThreshold, OffloadFS, RpcFabric,

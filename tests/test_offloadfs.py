@@ -1,10 +1,7 @@
 """OffloadFS core: extents, leases, authorization, coherence, mount."""
 import pytest
 
-from repro.core import (
-    BLOCK_SIZE, AcceptAll, BlockDevice, Extent, ExtentManager, OffloadFS,
-    RpcFabric,
-)
+from repro.core import BLOCK_SIZE, BlockDevice, OffloadFS, RpcFabric
 from repro.core.engine import OffloadEngine
 from repro.core.fs import LeaseViolation
 from repro.core.offloader import TaskOffloader, serve_engine

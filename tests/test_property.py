@@ -11,9 +11,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import BLOCK_SIZE, BlockDevice, ExtentManager, OffloadFS
+from repro.core import BlockDevice, ExtentManager, OffloadFS
 from repro.core.lsm import DBConfig, OffloadDB
-from repro.core.lsm.memtable import MemTable, TOMBSTONE
+from repro.core.lsm.memtable import MemTable
 from repro.core.lsm.wal import WriteAheadLog
 from repro.core.admission import TokenRing
 

@@ -2,11 +2,10 @@
 accounting, deterministic record replay order, error propagation."""
 import pickle
 import threading
-import time
 
 import pytest
 
-from repro.core.rpc import RpcError, RpcFabric, RpcRecord
+from repro.core.rpc import RpcError, RpcFabric
 
 
 def make_fabric(**kw):

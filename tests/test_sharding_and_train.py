@@ -8,7 +8,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.config import get_config
 from repro.models.model import build_model
-from repro.sharding import ShardingRules, make_rules
+from repro.sharding import make_rules
 from repro.train import optim
 from repro.train.step import init_state, make_train_step
 
