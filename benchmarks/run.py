@@ -9,6 +9,9 @@ CSV row to a file (uploaded as a CI artifact). The exit code is the number
 of failed claims plus crashed modules — CI gates on it directly instead of
 grepping the output (shell ``! grep`` masks pipeline errors under
 ``pipefail``).
+
+Every module, the paper figure it reproduces, how to run it standalone,
+and its pass thresholds are documented in ``docs/BENCHMARKS.md``.
 """
 import importlib
 import sys
@@ -28,6 +31,7 @@ MODULES = [
     "benchmarks.fig13_cache_pollution",
     "benchmarks.fig14_sharded_plane",
     "benchmarks.fig15_async_wal",
+    "benchmarks.fig16_striped_extents",
     "benchmarks.roofline_report",
 ]
 
@@ -35,18 +39,31 @@ SMOKE_MODULES = [
     "benchmarks.fig2_fs_overhead",
     "benchmarks.fig14_sharded_plane",
     "benchmarks.fig15_async_wal",
+    "benchmarks.fig16_striped_extents",
     "benchmarks.roofline_report",
 ]
+
+USAGE = """\
+usage: PYTHONPATH=src python -m benchmarks.run [--smoke] [--out FILE]
+
+  --smoke   fast subset only (the CI bench-smoke job)
+  --out F   mirror every CSV row to F (uploaded as a CI artifact)
+
+Exit code = failed claims + crashed modules. Per-figure documentation
+(paper figure, how to run standalone, pass thresholds): docs/BENCHMARKS.md
+"""
 
 
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
+    if "--help" in argv or "-h" in argv:
+        print(USAGE)
+        return 0
     modules = SMOKE_MODULES if "--smoke" in argv else MODULES
     if "--out" in argv:
         i = argv.index("--out")
         if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
-            print("usage: benchmarks.run [--smoke] [--out FILE]",
-                  file=sys.stderr)
+            print(USAGE, file=sys.stderr)
             return 2
         common.OUT = open(argv[i + 1], "w")
     t0 = time.time()

@@ -9,6 +9,14 @@ concurrent conflicting access by construction.
 
 No directory-task offloading; inode/extent mutations (create, truncate,
 fallocate, stat) happen only on the initiator.
+
+Striping (``shards=N``): files pin to an extent-allocator stripe at
+``create(path, shard=k)`` and all their allocations come from it;
+``file_shard``/``shard_of_extents`` expose the (dominant) stripe so the
+offload plane can route each task to the target owning its blocks. The
+shard count, per-file pins and per-extent shard ids persist through the
+superblock (``flush_metadata``/``mount``), with pre-striping superblocks
+mounting as flat single-stripe volumes.
 """
 from __future__ import annotations
 
@@ -30,6 +38,9 @@ class Inode:
     size: int = 0  # bytes
     mtime: float = 0.0  # logical clock
     extents: List[Extent] = field(default_factory=list)  # sorted by file_offset
+    # placement affinity: all of this file's future allocations are served
+    # from this stripe (None = flat allocation, the seed behaviour)
+    shard: Optional[int] = None
 
 
 @dataclass
@@ -220,10 +231,12 @@ class OffloadFS:
     """One instance per initiator node (single-writer metadata)."""
 
     def __init__(self, dev: BlockDevice, *, node: str = "initiator0",
-                 reserved_blocks: int = SB_BLOCKS):
+                 reserved_blocks: int = SB_BLOCKS, shards: int = 1):
         self.dev = dev
         self.node = node
-        self.extmgr = ExtentManager(dev.num_blocks, reserved=reserved_blocks)
+        self.shards = shards
+        self.extmgr = ExtentManager(dev.num_blocks, reserved=reserved_blocks,
+                                    shards=shards)
         self._inodes: Dict[int, Inode] = {}
         self._names: Dict[str, int] = {}
         self._ino_counter = itertools.count(1)
@@ -256,10 +269,13 @@ class OffloadFS:
                     "names": dict(self._names),
                     "inodes": {
                         i: (n.path, n.size, n.mtime,
-                            [(e.file_offset, e.block, e.nblocks) for e in n.extents])
+                            [(e.file_offset, e.block, e.nblocks, e.shard)
+                             for e in n.extents],
+                            n.shard)
                         for i, n in self._inodes.items()
                     },
                     "clock": self._clock,
+                    "shards": self.shards,
                 }
             )
             hdr = len(blob).to_bytes(8, "little") + zlib.crc32(blob).to_bytes(4, "little")
@@ -294,16 +310,25 @@ class OffloadFS:
         meta = _pkl.loads(blob)
         fs._names = dict(meta["names"])
         fs._clock = meta["clock"]
+        fs.shards = meta.get("shards", 1)  # pre-striping superblocks: flat
+        # rebuild the free lists: everything minus used extents
+        fs.extmgr = ExtentManager(dev.num_blocks, reserved=SB_BLOCKS,
+                                  shards=fs.shards)
         max_ino = 0
         used: List[Extent] = []
-        for i, (path, size_, mtime, exts) in meta["inodes"].items():
-            extents = [Extent(fo, b, n) for fo, b, n in exts]
-            fs._inodes[i] = Inode(i, path, size_, mtime, extents)
+        for i, rec in meta["inodes"].items():
+            # pre-striping records are (path, size, mtime, 3-tuple extents)
+            path, size_, mtime, exts = rec[:4]
+            file_shard = rec[4] if len(rec) > 4 else None
+            extents = [
+                Extent(t[0], t[1], t[2],
+                       t[3] if len(t) > 3 else fs.extmgr.shard_of(t[1]))
+                for t in exts
+            ]
+            fs._inodes[i] = Inode(i, path, size_, mtime, extents, file_shard)
             used.extend(extents)
             max_ino = max(max_ino, i)
         fs._ino_counter = itertools.count(max_ino + 1)
-        # rebuild the free list: everything minus used extents
-        fs.extmgr = ExtentManager(dev.num_blocks, reserved=SB_BLOCKS)
         for e in sorted(used, key=lambda e: e.block):
             # carve out of the free list by allocating exactly that run
             fs.extmgr.carve(e.block, e.nblocks)
@@ -354,12 +379,17 @@ class OffloadFS:
             return tids
 
     # ------------------------------------------------------------ metadata
-    def create(self, path: str) -> int:
+    def create(self, path: str, *, shard: Optional[int] = None) -> int:
+        """Create a file; ``shard`` pins all of its allocations to one
+        stripe (placement affinity for the offload target that will compute
+        on it). None = flat allocation."""
         with self._lock:
             if path in self._names:
                 raise FileExistsError(path)
+            if shard is not None and not 0 <= shard < self.shards:
+                raise ValueError(f"shard {shard} out of range [0, {self.shards})")
             ino = next(self._ino_counter)
-            self._inodes[ino] = Inode(ino, path, mtime=self._tick())
+            self._inodes[ino] = Inode(ino, path, mtime=self._tick(), shard=shard)
             self._names[path] = ino
             return ino
 
@@ -412,8 +442,9 @@ class OffloadFS:
                     drop.append(e)
                 else:
                     cut = nblocks - e.file_offset
-                    keep.append(Extent(e.file_offset, e.block, cut))
-                    drop.append(Extent(e.file_offset + cut, e.block + cut, e.nblocks - cut))
+                    keep.append(Extent(e.file_offset, e.block, cut, e.shard))
+                    drop.append(Extent(e.file_offset + cut, e.block + cut,
+                                       e.nblocks - cut, e.shard))
             self.extmgr.free(drop)
             for e in drop:
                 # trim like delete() does: freed blocks must read as zeros,
@@ -432,14 +463,37 @@ class OffloadFS:
             have = sum(e.nblocks for e in inode.extents)
             need = (size + BLOCK_SIZE - 1) // BLOCK_SIZE - have
             if need > 0:
-                new = self.extmgr.alloc(need)
+                new = self.extmgr.alloc(need, shard=inode.shard)
                 off = have
                 for e in new:
-                    inode.extents.append(Extent(off, e.block, e.nblocks))
+                    inode.extents.append(Extent(off, e.block, e.nblocks, e.shard))
                     off += e.nblocks
             inode.size = max(inode.size, size)
             inode.mtime = self._tick()
             return list(inode.extents)
+
+    # --------------------------------------------------------- placement
+    def file_shard(self, path: str) -> Optional[int]:
+        """The stripe a file's blocks live on: the pinned placement shard
+        if one was set at create(), else the dominant shard of its extents
+        (spills can leave a minority elsewhere), else None (empty file on a
+        flat volume)."""
+        with self._lock:
+            inode = self._inodes[self._names[path]]
+            if inode.shard is not None:
+                return inode.shard
+            return self.shard_of_extents(inode.extents)
+
+    def shard_of_extents(self, extents: Sequence[Extent]) -> Optional[int]:
+        """Dominant stripe of an extent list, by block count (placement-
+        affinity routing key). None when the list is empty."""
+        weights: Dict[int, int] = {}
+        for e in extents:
+            weights[e.shard] = weights.get(e.shard, 0) + e.nblocks
+        if not weights:
+            return None
+        # most blocks wins; ties break to the smaller shard id (determinism)
+        return min(weights, key=lambda k: (-weights[k], k))
 
     # ------------------------------------------------------------ file IO
     def _extent_blocks(self, inode: Inode, offset: int, length: int):

@@ -15,6 +15,12 @@ Key design points reproduced:
     allocation and commit loses nothing — recovery reclaims orphan blocks.
   * initiator-side table cache (the user-level block cache): compaction on
     the initiator pollutes it (Fig. 12/13); offloaded compaction does not.
+  * striped placement (this repo's extension): on a striped OffloadFS
+    (``shards=N``), WAL generations rotate across stripes and every
+    flush/compaction output is pinned to the job's dominant input stripe —
+    combined with the offloader's ``placement_affinity`` policy, each
+    job's reads and writes land on the NVMe FIFO of the target that
+    executes it (Fig. 16).
 """
 from __future__ import annotations
 
@@ -55,6 +61,13 @@ class DBConfig:
     table_cache_bytes: int = 8 * 1024 * 1024
     cache_compaction_reads: bool = True  # False = "dio-compaction" (Fig. 12)
     peer_target: Optional[str] = None  # offload to a peer initiator instead
+    # multi-tenant striping: `namespace` prefixes every path this instance
+    # creates (several OffloadDBs can share one OffloadFS), and
+    # `placement_shard` pins ALL of the instance's files to one stripe so
+    # its flush/compaction I/O never shares an NVMe FIFO with a co-tenant
+    # (None on a striped volume = rotate WAL generations across stripes)
+    namespace: str = ""
+    placement_shard: Optional[int] = None
 
 
 class TableCache:
@@ -100,7 +113,8 @@ class OffloadDB:
         self.fs = fs
         self.off = offloader
         self.cfg = cfg
-        self.manifest = Manifest(fs)
+        self.manifest = Manifest(fs, cfg.namespace + "/MANIFEST",
+                                 shard=cfg.placement_shard)
         self._gen = itertools.count(1)
         self._tid = itertools.count(1)
         self.tables: Dict[int, TableMeta] = {}
@@ -127,7 +141,14 @@ class OffloadDB:
 
     def _new_wal(self):
         g = next(self._gen)
-        path = f"/wal/{g:08d}"
+        path = f"{self.cfg.namespace}/wal/{g:08d}"
+        if self.fs.shards > 1:
+            # pinned instance: every WAL on its stripe; otherwise rotate
+            # generations so each flush's reads (Log Recycling) stay on one
+            # shard while consecutive memtables land on different FIFOs
+            shard = self.cfg.placement_shard
+            self.fs.create(path, shard=g % self.fs.shards
+                           if shard is None else shard)
         self.wal = WriteAheadLog(
             self.fs, path, sync=self.cfg.sync_wal, shipper=self.wal_shipper,
             segment_bytes=self.cfg.wal_segment_bytes,
@@ -250,8 +271,24 @@ class OffloadDB:
         ino = self.fs.stat(path)
         return [(e.block, e.nblocks) for e in ino.extents], ino.size
 
-    def _alloc_outputs(self, total_bytes: int) -> List[dict]:
-        """Preallocate output files sized to the inputs (paper §IV-A)."""
+    def _placement_shard(self, read_paths) -> Optional[int]:
+        """Striped placement key for a job: the instance's pinned stripe,
+        else the stripe owning most of its input blocks (outputs go there
+        too, and placement_affinity routing sends the task to the same
+        target). None on flat volumes."""
+        if self.fs.shards <= 1:
+            return None
+        if self.cfg.placement_shard is not None:
+            return self.cfg.placement_shard
+        exts = []
+        for p in read_paths:
+            exts.extend(self.fs.stat(p).extents)
+        return self.fs.shard_of_extents(exts)
+
+    def _alloc_outputs(self, total_bytes: int,
+                       shard: Optional[int] = None) -> List[dict]:
+        """Preallocate output files sized to the inputs (paper §IV-A),
+        pinned to ``shard`` on striped volumes."""
         tgt = self.cfg.sstable_target_bytes
         # headroom: per-record index/footer overhead can exceed the input
         # size estimate for tiny records; unused outputs are reclaimed
@@ -259,8 +296,8 @@ class OffloadDB:
         outs = []
         for _ in range(k):
             tid = next(self._tid)
-            path = f"/sst/tmp-{tid:08d}"
-            self.fs.create(path)
+            path = f"{self.cfg.namespace}/sst/tmp-{tid:08d}"
+            self.fs.create(path, shard=shard)
             exts = self.fs.fallocate(path, tgt + BLOCK_SIZE)
             outs.append({
                 "tid": tid, "path": path,
@@ -323,7 +360,7 @@ class OffloadDB:
         used_idx = {r["idx"] for r in results}
         for r in results:
             o = outs[r["idx"]]
-            path = f"/sst/{level_to}/{o['tid']:08d}"
+            path = f"{self.cfg.namespace}/sst/{level_to}/{o['tid']:08d}"
             self.fs.rename(o["path"], path)
             self.fs.truncate(path, r["used"])  # reclaim unused tail blocks
             meta = TableMeta(
@@ -355,7 +392,9 @@ class OffloadDB:
         """Build the submission for flushing one immutable memtable."""
         mem: MemTable = entry["mem"]
         total = mem.bytes + 24 * len(mem) + 4096
-        outs = self._alloc_outputs(total)
+        outs = self._alloc_outputs(
+            total, shard=self._placement_shard([entry["wal"].path])
+        )
         runs, size = self._file_runs(entry["wal"].path)
         wal_arg = {"runs": runs, "size": size, "offsets": mem.sorted_offsets()}
         self.stats["flush_rpc_payload"] += 8 * len(mem)  # offsets only
@@ -387,7 +426,9 @@ class OffloadDB:
         # itself (each KV pair crosses the fabric a second time)
         mem: MemTable = entry["mem"]
         total = mem.bytes + 24 * len(mem) + 4096
-        outs = self._alloc_outputs(total)
+        outs = self._alloc_outputs(
+            total, shard=self._placement_shard([entry["wal"].path])
+        )
         data = build_bytes([(k, v) for k, v, _ in mem.items()])
         self.stats["flush_rpc_payload"] += len(data)
         o = outs[0]
@@ -536,7 +577,7 @@ class OffloadDB:
             inputs.append({"runs": runs, "size": size})
             read_paths.append(self.tables[t].path)
         total = sum(i["size"] for i in inputs) + sum(r["size"] for r in recycle) + 4096
-        outs = self._alloc_outputs(total)
+        outs = self._alloc_outputs(total, shard=self._placement_shard(read_paths))
         drop = (self.cfg.max_level == 1)
         return {
             "kind": "l0", "task": "compact", "level": 0,
@@ -593,7 +634,7 @@ class OffloadDB:
             inputs.append({"runs": runs, "size": size})
             read_paths.append(self.tables[t].path)
         total = sum(i["size"] for i in inputs) + 4096
-        outs = self._alloc_outputs(total)
+        outs = self._alloc_outputs(total, shard=self._placement_shard(read_paths))
         drop = lvl + 1 >= self.cfg.max_level
         return {
             "kind": "level", "task": "compact", "level": lvl,
@@ -650,7 +691,8 @@ class OffloadDB:
         db.off = offloader
         db.cfg = cfg
         db.orphans_reclaimed = fs.reclaim_orphans()
-        db.manifest = Manifest(fs)
+        db.manifest = Manifest(fs, cfg.namespace + "/MANIFEST",
+                               shard=cfg.placement_shard)
         db.tables = {}
         db.levels = {i: [] for i in range(cfg.max_level + 1)}
         db.imm = []
@@ -686,8 +728,9 @@ class OffloadDB:
             db.levels[lvl].sort(key=lambda t: db.tables[t].min_key)
         db._tid = itertools.count(max_tid + 1)
         db._gen = itertools.count(active_gen + 1)
-        # orphan reclamation: tmp files never committed
-        for path in fs.listdir("/sst/tmp-"):
+        # orphan reclamation: tmp files never committed (namespace-scoped:
+        # co-tenant instances' in-flight outputs are not ours to reclaim)
+        for path in fs.listdir(f"{cfg.namespace}/sst/tmp-"):
             fs.delete(path)
         db.wal_shipper = db._make_shipper()
         # rebuild deferred L0s from their WALs (oldest first); reopen()

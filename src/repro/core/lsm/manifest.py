@@ -22,11 +22,14 @@ _LHDR = struct.Struct("<II")  # length, crc
 
 
 class Manifest:
-    def __init__(self, fs: OffloadFS, path: str = "/MANIFEST"):
+    def __init__(self, fs: OffloadFS, path: str = "/MANIFEST", *,
+                 shard=None):
         self.fs = fs
         self.path = path
         if not fs.exists(path):
-            fs.create(path)
+            # on striped volumes the owning instance pins its MANIFEST to
+            # its stripe so foreground commits stay off co-tenant FIFOs
+            fs.create(path, shard=shard)
         self._buf = bytearray()
         self._size = 0
         self.commits = 0

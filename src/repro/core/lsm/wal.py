@@ -20,6 +20,12 @@ through an in-memory tail buffer. Three durability modes:
 Recycling; ``replay``/``replay_raw`` are torn-tail tolerant (a half-shipped
 segment after a crash decodes as garbage past the last intact record and is
 dropped — last durable prefix wins).
+
+On a striped volume (``OffloadFS(shards=N)``) the shipper routes each
+sealed segment to the target whose stripe owns the segment's blocks
+(placement affinity) instead of round-robin, so WAL traffic for different
+shards never shares an NVMe FIFO — the durability half of the Fig. 16
+placement story.
 """
 from __future__ import annotations
 
@@ -77,7 +83,14 @@ class WalShipper:
         self.segments_shipped = 0
         self.bytes_shipped = 0
 
-    def _pick(self) -> str:
+    def _pick(self, runs=None) -> str:
+        # placement affinity on striped volumes: land the segment on the
+        # target whose NVMe FIFO owns its blocks, so WAL traffic for
+        # different shards never shares a device queue; flat volumes keep
+        # the seed round-robin
+        if runs and self.fs.shards > 1:
+            shard = self.fs.extmgr.shard_of(runs[0][0])
+            return self.targets[shard % len(self.targets)]
         with self._lock:
             t = self.targets[self._rr % len(self.targets)]
             self._rr += 1
@@ -95,7 +108,8 @@ class WalShipper:
             "write_blocks": sorted(lease.write_blocks),
         }
         fut = self.fabric.call_async(
-            self.node, self._pick(), "wal_append", wire, runs, bytes(payload)
+            self.node, self._pick(runs), "wal_append", wire, runs,
+            bytes(payload)
         )
 
         def _release(_f):

@@ -14,6 +14,11 @@ registry* with pluggable load balancing:
   * ``admission_aware``   — like least_outstanding, but targets that
     recently rejected (admission pushback) are deprioritized until a
     submission succeeds there again
+  * ``placement_affinity`` — route each task to the target whose shard
+    stripe owns the task's extents (striped volumes: shard k of the extent
+    allocator maps to ``targets[k % N]``), so compaction reads on
+    different shards hit disjoint NVMe FIFOs; tasks without extents fall
+    back to least_outstanding
 
 and three submission shapes:
 
@@ -37,7 +42,8 @@ from repro.core.engine import OffloadEngine
 from repro.core.fs import Extent, Lease, OffloadFS
 from repro.core.rpc import RpcFabric, RpcFuture
 
-LB_POLICIES = ("round_robin", "least_outstanding", "admission_aware")
+LB_POLICIES = ("round_robin", "least_outstanding", "admission_aware",
+               "placement_affinity")
 
 
 @dataclass
@@ -47,6 +53,7 @@ class OffloadStats:
     rejected: int = 0
     ran_local: int = 0
     batches: int = 0  # submit_many wire batches sent
+    affinity_routed: int = 0  # tasks routed to the shard owning their extents
     by_target: Dict[str, int] = field(default_factory=dict)
     rejected_by_target: Dict[str, int] = field(default_factory=dict)
 
@@ -107,11 +114,33 @@ class TaskOffloader:
         if self.lb_policy == "round_robin":
             return self.targets[start]
         rotation = [self.targets[(start + i) % n] for i in range(n)]
-        if self.lb_policy == "least_outstanding":
+        if self.lb_policy in ("least_outstanding", "placement_affinity"):
+            # placement_affinity lands here only for tasks without extents
             return min(rotation, key=lambda t: self._outstanding[t])
         # admission_aware: avoid targets pushing back, then least loaded
         return min(rotation,
                    key=lambda t: (self._reject_streak[t], self._outstanding[t]))
+
+    def target_for_shard(self, shard: int) -> str:
+        """The target owning extent-allocator stripe ``shard``: engines are
+        registered in stripe order, so the mapping is positional."""
+        return self.targets[shard % len(self.targets)]
+
+    def _route(self, read_extents: Sequence[Extent],
+               write_extents: Sequence[Extent]) -> str:
+        """Placement-affinity target choice: the shard owning most of the
+        task's blocks (reads weighted with writes — both sides of a
+        compaction live on the same stripe under striped placement).
+        Extent-less tasks fall back to the load-balanced pick."""
+        if self.lb_policy == "placement_affinity":
+            shard = self.fs.shard_of_extents(
+                list(read_extents) + list(write_extents)
+            )
+            if shard is not None:
+                with self._lock:
+                    self.stats.affinity_routed += 1
+                return self.target_for_shard(shard)
+        return self.pick_target()
 
     def _begin(self, dst: str) -> None:
         with self._lock:
@@ -169,7 +198,7 @@ class TaskOffloader:
         (result, where_ran). The initiator quiesces on the leased write set
         for the duration (no DLM — lease discipline instead)."""
         coalesce = self.coalesce if coalesce is None else coalesce
-        dst = target or self.pick_target()
+        dst = target or self._route(read_extents, write_extents)
         lease = self.fs.grant_lease(read_extents, write_extents)
         self._begin(dst)
         ok = False
@@ -222,7 +251,7 @@ class TaskOffloader:
         rejected-task fallback runs at resolution. Always a single
         coalesced wire message — async submission has no legacy-handshake
         form, so ``coalesce=False`` offloaders still coalesce here."""
-        dst = target or self.pick_target()
+        dst = target or self._route(read_extents, write_extents)
         lease = self.fs.grant_lease(read_extents, write_extents)
         self._begin(dst)
         ofut = OffloadFuture()
@@ -283,7 +312,9 @@ class TaskOffloader:
         plan = []  # (idx, spec, dst, lease)
         try:
             for idx, s in enumerate(specs):
-                dst = s.get("target") or self.pick_target()
+                dst = s.get("target") or self._route(
+                    s.get("read_extents", ()), s.get("write_extents", ())
+                )
                 lease = self.fs.grant_lease(
                     s.get("read_extents", ()), s.get("write_extents", ())
                 )

@@ -1,8 +1,21 @@
-"""Cluster resource model calibrated to the paper's testbed (§VI-A):
+"""Cluster resource model calibrated to the paper's testbed (§VI-A),
+generalized to a *sharded* storage plane.
 
-  8 compute nodes: 2× Xeon Gold 5115 (20 vCPU), 64 GB, 1× FDR HCA
-  1 storage node: 2× Xeon Silver 4215 (16 vCPU, slower clocks), 128 GB,
-                  2× FDR HCA, 24× PM9A3 NVMe behind PoseidonOS
+The paper's testbed is 8 compute nodes (2× Xeon Gold 5115, 20 vCPU, 64 GB,
+1× FDR HCA each) against ONE storage node (2× Xeon Silver 4215, 128 GB,
+2× FDR HCA, 24× PM9A3 NVMe behind PoseidonOS). ``Cluster(n_storage=N)``
+replicates the storage node N times — each target gets its own CPU pool,
+HCA links, NVMe read/write FIFOs and PoseidonOS reactor pool — which is
+what the striped placement path (Fig. 16) and the Fig. 8/9 shard-count
+sweeps model. Every primitive takes ``target=k``; the single-node
+attributes (``cpu_s``, ``net_s``, ``nvme_r``, ``nvme_w``, ``posvol``)
+remain as **target-0 back-compat aliases** so pre-sharding scenarios run
+unchanged.
+
+Beyond the paper, the model carries the repo's extensions: ``rpc_batch``
+(coalesced wire messages, PR 1), ``wal_ship`` (async near-data WAL
+segment writes, PR 2) and ``crash_remount`` (metadata-only lease-journal
+replay, PR 2).
 
 Rates are deliberately coarse (the DES reproduces the paper's *relative*
 claims; EXPERIMENTS.md records per-figure deltas):

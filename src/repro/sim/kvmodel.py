@@ -1,4 +1,5 @@
-"""DES workload model for the OffloadDB experiments (Figs. 7a, 8, 10, 11).
+"""DES workload model for the OffloadDB experiments (Figs. 7a, 8, 10, 11,
+and the Fig. 8 ``n_storage`` shard-count sweeps).
 
 Mechanics (why the paper's effects emerge here):
   * Every client op pays initiator CPU + WAL bytes over the fabric; cluster
@@ -19,6 +20,11 @@ Mechanics (why the paper's effects emerge here):
     job and a share of foreground ops on the directory lock → offloading
     makes it WORSE (the paper's key negative result); GFS2's block-grain
     locks cost messages but parallelize → it scales from a lower base.
+  * ``n_storage > 1`` models the striped offload plane: initiator i's WAL,
+    flush and compaction I/O lands on storage target ``i % n_storage``
+    (placement affinity), each target with its own CPU pool, links and
+    NVMe FIFOs — the Fig. 8 shard-count sweep shows the single-target
+    saturation knee moving out as targets are added.
 """
 from __future__ import annotations
 
@@ -71,6 +77,9 @@ class KVParams:
     io_bw_near: float = 6.0e9    # near-data (SPDK direct on the array)
     io_bw_peer: float = 2.0e9    # peer's dedicated link, full duplex
     miss_latency: float = 110e-6  # per point-lookup storage round trip
+    # striped offload plane: N storage targets, initiator i's placement-
+    # affine I/O lands on target i % n_storage (disjoint FIFOs per shard)
+    n_storage: int = 1
 
 
 @dataclass
@@ -115,8 +124,14 @@ def run_kv(params: KVParams, *, instances: int = 1,
     sim = Sim()
     # one extra node when offloading to a peer
     n_nodes = instances + (1 if params.peer else 0)
-    cl = Cluster(sim, spec, n_initiators=n_nodes)
+    n_storage = max(1, params.n_storage)
+    cl = Cluster(sim, spec, n_initiators=n_nodes, n_storage=n_storage)
     peer_id = n_nodes - 1
+
+    def tg(i: int) -> int:
+        """Placement affinity: initiator i's storage target (shard)."""
+        return i % n_storage
+
     dirlock = sim.resource("dirlock", 1.0 / spec.dlm_rtt)
     journals = [sim.resource(f"journal{i}", 1.0) for i in range(instances)]
     journal_s = sim.resource("journal_storage", 1.0)  # target-node journal
@@ -124,11 +139,14 @@ def run_kv(params: KVParams, *, instances: int = 1,
         "backlog": [list() for _ in range(instances)],
         "stall": [0.0] * instances,
         "net_bytes": 0.0,
-        "inflight_storage_cores": 0,
+        "inflight_storage_cores": [0] * n_storage,
         "latencies": [],
         "wal_fill": [0.0] * instances,
     }
-    cpu_probe = lambda: state["inflight_storage_cores"] / spec.storage_cores
+    # a CPU-threshold policy must see the BUSIEST target: with uneven
+    # initiator→shard placement one saturated target would otherwise hide
+    # behind the fleet average and never push back
+    cpu_probe = lambda: max(state["inflight_storage_cores"]) / spec.storage_cores
     if policy is None or isinstance(policy, str):
         policy = make_policy(policy, sim, cpu_probe)
 
@@ -184,27 +202,28 @@ def run_kv(params: KVParams, *, instances: int = 1,
         if after is not None:
             yield ("join", after)
         mt = params.memtable_bytes
+        t = tg(i)
         offloaded = params.offload_flush and sysname != "ext4" \
             and policy.admit(f"init{i}")
         if offloaded:
-            yield from cl.rpc(i, 4096)
-            state["inflight_storage_cores"] += 2
+            yield from cl.rpc(i, 4096, target=t)
+            state["inflight_storage_cores"][t] += 2
             if params.log_recycling:
                 off_bytes = mt / rec * 8
-                yield from cl.net_transfer(i, off_bytes)  # offsets only
-                yield ("use", cl.nvme_r, mt)  # WAL read, near-data
+                yield from cl.net_transfer(i, off_bytes, target=t)  # offsets only
+                yield ("use", cl.nvme_r_t[t], mt)  # WAL read, near-data
             else:
-                yield from cl.net_transfer(i, mt)
+                yield from cl.net_transfer(i, mt, target=t)
                 state["net_bytes"] += mt
             yield from job_locks(i, mt, remote=True)
-            yield from merge_work(cl.cpu_s, mt, io_bw=params.io_bw_near)
-            yield ("use", cl.nvme_w, mt)
-            state["inflight_storage_cores"] -= 2
+            yield from merge_work(cl.cpu_s_t[t], mt, io_bw=params.io_bw_near)
+            yield ("use", cl.nvme_w_t[t], mt)
+            state["inflight_storage_cores"][t] -= 2
             policy.complete(f"init{i}")
         else:
             yield from merge_work(cl.cpu_i[i], mt, io_bw=params.io_bw_fabric)
             yield from job_locks(i, mt, remote=False)
-            yield from cl.storage_write(i, mt)
+            yield from cl.storage_write(i, mt, target=t)
             state["net_bytes"] += mt
 
     def compact_job(i, level, after=None):
@@ -212,32 +231,33 @@ def run_kv(params: KVParams, *, instances: int = 1,
             yield ("join", after)  # same-level jobs serialize (RocksDB)
         size = params.memtable_bytes * params.l0_trigger * 1.5 \
             * (params.size_growth ** level)
+        t = tg(i)
         offloaded = level < params.offload_levels and sysname != "ext4" \
             and policy.admit(f"init{i}")
         if offloaded and not params.peer:
-            yield from cl.rpc(i, 4096)
-            state["inflight_storage_cores"] += params.subcompactions
-            yield ("use", cl.nvme_r, size)  # near-data
+            yield from cl.rpc(i, 4096, target=t)
+            state["inflight_storage_cores"][t] += params.subcompactions
+            yield ("use", cl.nvme_r_t[t], size)  # near-data
             yield from job_locks(i, size, remote=True)
-            yield from merge_work(cl.cpu_s, size, cached=params.offload_cache, io_bw=params.io_bw_near)
-            yield ("use", cl.nvme_w, size)
-            state["inflight_storage_cores"] -= params.subcompactions
+            yield from merge_work(cl.cpu_s_t[t], size, cached=params.offload_cache, io_bw=params.io_bw_near)
+            yield ("use", cl.nvme_w_t[t], size)
+            state["inflight_storage_cores"][t] -= params.subcompactions
             policy.complete(f"init{i}")
         elif offloaded and params.peer:
-            yield from cl.rpc(i, 4096)
-            yield ("use", cl.nvme_r, size)
+            yield from cl.rpc(i, 4096, target=t)
+            yield ("use", cl.nvme_r_t[t], size)
             yield ("use", cl.net_i[peer_id], size)  # storage→peer
             yield from job_locks(i, size, remote=True, via_peer=True)
             yield from merge_work(cl.cpu_i[peer_id], size, cached=params.offload_cache, io_bw=params.io_bw_peer)
             yield ("use", cl.net_i[peer_id], size)  # peer→storage
-            yield ("use", cl.nvme_w, size)
+            yield ("use", cl.nvme_w_t[t], size)
             state["net_bytes"] += 2 * size
             policy.complete(f"init{i}")
         else:
-            yield from cl.storage_read(i, size)
+            yield from cl.storage_read(i, size, target=t)
             yield from job_locks(i, size, remote=False)
             yield from merge_work(cl.cpu_i[i], size, io_bw=params.io_bw_fabric)
-            yield from cl.storage_write(i, size)
+            yield from cl.storage_write(i, size, target=t)
             state["net_bytes"] += 2 * size
 
     fill = [0.0] * instances
@@ -268,12 +288,13 @@ def run_kv(params: KVParams, *, instances: int = 1,
                     state["wal_fill"][i] += nw * rec
                     while state["wal_fill"][i] >= params.wal_segment_bytes:
                         state["wal_fill"][i] -= params.wal_segment_bytes
-                        sim.spawn(cl.wal_ship(i, params.wal_segment_bytes))
+                        sim.spawn(cl.wal_ship(i, params.wal_segment_bytes,
+                                              target=tg(i)))
                         state["net_bytes"] += params.wal_segment_bytes
                 else:
                     if params.sync_wal:
                         yield ("delay", nw * spec.rpc_rtt)
-                    yield from cl.storage_write(i, nw * rec)
+                    yield from cl.storage_write(i, nw * rec, target=tg(i))
                     state["net_bytes"] += nw * rec
                 fill[i] += nw * rec * 1.05
             if nr:
@@ -281,7 +302,7 @@ def run_kv(params: KVParams, *, instances: int = 1,
                 if misses:
                     rb = misses * params.value_bytes * params.read_amp
                     yield ("delay", misses * params.miss_latency / 8)
-                    yield from cl.storage_read(i, rb)
+                    yield from cl.storage_read(i, rb, target=tg(i))
                     state["net_bytes"] += rb
             # flush / compaction triggers (instance-shared accounting; DES
             # events don't interleave within a step → no races)
@@ -325,7 +346,9 @@ def run_kv(params: KVParams, *, instances: int = 1,
     return KVResult(
         throughput=total / makespan if makespan else 0.0,
         latencies=state["latencies"],
-        storage_cpu_util=cl.cpu_s.utilization(makespan),
+        storage_cpu_util=sum(
+            r.utilization(makespan) for r in cl.cpu_s_t
+        ) / n_storage,
         initiator_cpu_util=cl.cpu_i[0].utilization(makespan),
         net_bytes=state["net_bytes"],
         stall_time=sum(state["stall"]),

@@ -1,5 +1,6 @@
-"""DES workload model for OffloadPrep (Figs. 7b, 9): ML image preprocessing
-offloaded to the storage node / a peer initiator / both.
+"""DES workload model for OffloadPrep (Figs. 7b, 9, and the Fig. 9
+``n_storage`` shard-count sweeps): ML image preprocessing offloaded to the
+storage node(s) / a peer initiator / both.
 
 Near-data effect: an image offloaded to the storage node is read from NVMe
 *without* crossing the fabric; only the normalized tensor returns. A peer
@@ -7,6 +8,12 @@ offload ships the raw image out and the tensor back, but peers have faster
 cores and no PoseidonOS housekeeping. The pre-processing turnaround of a
 minibatch is max(local share, offloaded shares) — the paper's knee at
 ~40–50% offload ratio (Fig. 7b).
+
+``n_storage > 1`` models the striped plane: initiator i's corpus lives on
+storage target ``i % n_storage`` (placement affinity), so its reads and
+offloaded preprocessing use that target's NVMe/CPU/links only — the
+AcceptAll collapse at 8 initiators (Fig. 9) is deferred as targets are
+added.
 """
 from __future__ import annotations
 
@@ -28,6 +35,8 @@ class PrepParams:
     out_tensor_bytes: float = 224 * 224 * 3 * 4
     offload_ratio: float = 1 / 3
     target: str = "storage"  # storage | peer | both
+    # striped plane: initiator i's corpus + offloads on target i % n_storage
+    n_storage: int = 1
 
 
 @dataclass
@@ -45,10 +54,19 @@ def run_prep(params: PrepParams, *, instances: int = 1,
     sim = Sim()
     # peers exist when offloading to peers: one extra idle initiator
     n_nodes = instances + (1 if params.target in ("peer", "both") else 0)
-    cl = Cluster(sim, spec, n_initiators=n_nodes)
+    n_storage = max(1, params.n_storage)
+    cl = Cluster(sim, spec, n_initiators=n_nodes, n_storage=n_storage)
     peer_id = n_nodes - 1
-    state = {"net": 0.0, "inflight": 0, "offloaded": 0, "rejected": 0}
-    cpu_probe = lambda: state["inflight"] / spec.storage_cores
+
+    def tg(i: int) -> int:
+        """Placement affinity: initiator i's storage target (shard)."""
+        return i % n_storage
+
+    state = {"net": 0.0, "inflight": [0] * n_storage,
+             "offloaded": 0, "rejected": 0}
+    # probe the BUSIEST target (see kvmodel): a saturated shard must not
+    # hide behind the fleet average
+    cpu_probe = lambda: max(state["inflight"]) / spec.storage_cores
     if policy is None or isinstance(policy, str):
         policy = make_policy(policy, sim, cpu_probe)
     sysname = params.system
@@ -66,33 +84,35 @@ def run_prep(params: PrepParams, *, instances: int = 1,
         nbytes = n * params.avg_image_bytes
         if dlm_per_open:
             yield from cl.dlm_msgs(n * dlm_per_open)
-        yield from cl.storage_read(i, nbytes)
+        yield from cl.storage_read(i, nbytes, target=tg(i))
         state["net"] += nbytes
         yield from cl.cpu_work(i, n * img_cpu * fs_tax_local)
 
     def storage_images(i, n):
-        yield from cl.rpc(i, 2048)
-        state["inflight"] += n
+        t = tg(i)
+        yield from cl.rpc(i, 2048, target=t)
+        state["inflight"][t] += n
         if dlm_per_open:
             yield from cl.dlm_msgs(n * dlm_per_open)
-        yield ("use", cl.nvme_r, n * params.avg_image_bytes)  # near-data read
-        yield from cl.cpu_work(None, n * img_cpu * fs_tax_remote)
+        yield ("use", cl.nvme_r_t[t], n * params.avg_image_bytes)  # near-data read
+        yield from cl.cpu_work(None, n * img_cpu * fs_tax_remote, target=t)
         ret = n * params.out_tensor_bytes
-        yield from cl.net_transfer(i, ret)
+        yield from cl.net_transfer(i, ret, target=t)
         state["net"] += ret
-        state["inflight"] -= n
+        state["inflight"][t] -= n
 
     def peer_images(i, n):
-        yield from cl.rpc(i, 2048)
+        t = tg(i)
+        yield from cl.rpc(i, 2048, target=t)
         if dlm_per_open:
             yield from cl.dlm_msgs(n * dlm_per_open)
         nbytes = n * params.avg_image_bytes
-        yield from cl.storage_read(peer_id, nbytes)  # peer pulls the images
+        yield from cl.storage_read(peer_id, nbytes, target=t)  # peer pulls the images
         yield from cl.cpu_work(peer_id, n * img_cpu * fs_tax_remote)
         ret = n * params.out_tensor_bytes
-        yield from cl.net_transfer(i, ret)
+        yield from cl.net_transfer(i, ret, target=t)
         state["net"] += nbytes + ret
-        yield from cl.net_transfer(peer_id, 0.0)
+        yield from cl.net_transfer(peer_id, 0.0, target=t)
 
     def worker(i, n_minibatches):
         for _ in range(n_minibatches):
@@ -133,7 +153,9 @@ def run_prep(params: PrepParams, *, instances: int = 1,
     makespan = sim.run()
     return PrepResult(
         epoch_time=makespan,
-        storage_cpu_util=cl.cpu_s.utilization(makespan),
+        storage_cpu_util=sum(
+            r.utilization(makespan) for r in cl.cpu_s_t
+        ) / n_storage,
         net_bytes=state["net"],
         offloaded=state["offloaded"],
         rejected=state["rejected"],

@@ -49,6 +49,45 @@ def test_extent_allocator_invariants(seed):
 
 
 @pytest.mark.parametrize("seed", SEEDS)
+def test_striped_extent_allocator_invariants(seed):
+    rng = random.Random(seed)
+    mgr = ExtentManager(4096, reserved=64, shards=4)
+    per_shard_free = {k: mgr.free_blocks_in(k) for k in range(4)}
+    total_free = mgr.free_blocks
+    live = []
+    for _ in range(60):
+        if rng.random() < 0.6 or not live:
+            n, shard = rng.randrange(1, 30), rng.randrange(4)
+            try:
+                exts = mgr.alloc(n, shard=shard)
+            except IOError:
+                continue
+            blocks = [b for e in exts for b in range(e.block, e.block + e.nblocks)]
+            assert len(blocks) == n
+            for e in exts:
+                assert mgr.shard_of(e.block) == e.shard  # carried id honest
+                lo, hi = mgr.stripe_range(e.shard)
+                assert lo <= e.block and e.end <= hi  # runs never straddle
+            live.append((exts, set(blocks)))
+        else:
+            exts, _ = live.pop(rng.randrange(len(live)))
+            mgr.free(exts)
+    seen = set()
+    for _, blocks in live:
+        assert not (seen & blocks)  # no overlap across stripes
+        seen |= blocks
+    assert mgr.free_blocks == total_free - len(seen)
+    for k in range(4):  # per-stripe accounting exact
+        used_k = sum(1 for b in seen if mgr.shard_of(b) == k)
+        assert mgr.free_blocks_in(k) == per_shard_free[k] - used_k
+    for exts, _ in live:
+        mgr.free(exts)
+    assert mgr.free_blocks == total_free
+    for k in range(4):
+        assert mgr.fragmentation(k) == 1  # one merged run per stripe
+
+
+@pytest.mark.parametrize("seed", SEEDS)
 def test_memtable_matches_dict_and_sorted(seed):
     rng = random.Random(seed)
     mt = MemTable(seed=1)

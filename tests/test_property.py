@@ -51,6 +51,54 @@ def test_extent_allocator_invariants(ops):
     assert mgr.fragmentation() == 1
 
 
+# ------------------------------------------------- striped extents
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 30), st.integers(0, 3)),
+                min_size=1, max_size=60))
+def test_striped_extent_allocator_invariants(ops):
+    """Per-shard no-overlap + exact accounting: every invariant of the flat
+    allocator holds inside each stripe AND across stripes, and the shard id
+    carried on each extent matches the authoritative block→stripe map."""
+    mgr = ExtentManager(4096, reserved=64, shards=4)
+    per_shard_free = {k: mgr.free_blocks_in(k) for k in range(4)}
+    total_free = mgr.free_blocks
+    assert total_free == sum(per_shard_free.values())
+    live = []
+    for is_alloc, n, shard in ops:
+        if is_alloc or not live:
+            try:
+                exts = mgr.alloc(n, shard=shard)
+            except IOError:
+                continue
+            blocks = [b for e in exts for b in range(e.block, e.block + e.nblocks)]
+            assert len(blocks) == n
+            for e in exts:
+                # carried shard id == authoritative stripe of the run
+                assert mgr.shard_of(e.block) == e.shard
+                lo, hi = mgr.stripe_range(e.shard)
+                assert lo <= e.block and e.end <= hi  # runs never straddle
+            live.append((exts, set(blocks)))
+        else:
+            exts, _ = live.pop(random.Random(n).randrange(len(live)))
+            mgr.free(exts)
+    # no overlap between live allocations (across all stripes)
+    seen = set()
+    for _, blocks in live:
+        assert not (seen & blocks)
+        seen |= blocks
+    # accounting exact globally and per stripe
+    assert mgr.free_blocks == total_free - len(seen)
+    for k in range(4):
+        used_k = sum(1 for b in seen if mgr.shard_of(b) == k)
+        assert mgr.free_blocks_in(k) == per_shard_free[k] - used_k
+    # full cleanup merges back into one run per stripe
+    for exts, _ in live:
+        mgr.free(exts)
+    assert mgr.free_blocks == total_free
+    for k in range(4):
+        assert mgr.fragmentation(k) == 1
+
+
 # ------------------------------------------------------------ memtable
 @settings(max_examples=40, deadline=None)
 @given(st.lists(st.tuples(st.binary(min_size=1, max_size=12),

@@ -21,9 +21,9 @@ def peek(io, blk, n=1):
 
 def build_plane(n_targets=2, *, policies=None, node="init0",
                 lb_policy="least_outstanding", cache_blocks=256,
-                max_inflight=4, blocks=1 << 16):
+                max_inflight=4, blocks=1 << 16, shards=1):
     dev = BlockDevice(num_blocks=blocks)
-    fs = OffloadFS(dev, node=node)
+    fs = OffloadFS(dev, node=node, shards=shards)
     fabric = RpcFabric()
     if policies is None:
         policies = [AcceptAll() for _ in range(n_targets)]
@@ -224,6 +224,96 @@ def test_failed_flush_round_keeps_data_and_reclaims_outputs():
     assert db.imm == [] and len(db.levels[0]) == n_imm
     for k, v in model.items():
         assert db.get(k) == v
+
+
+# --------------------------------------------- striped placement routing
+def test_placement_affinity_routes_to_owning_shard():
+    """A task whose extents live on stripe k must land on targets[k]."""
+    _, fs, fabric, engines, off = build_plane(
+        3, shards=3, lb_policy="placement_affinity"
+    )
+    for shard in range(3):
+        p = f"/f{shard}"
+        fs.create(p, shard=shard)
+        fs.write(p, bytes([65 + shard]) * BLOCK_SIZE * 4, 0)
+        ex = fs.stat(p).extents
+        assert all(e.shard == shard for e in ex)  # placement honoured
+        res, where = off.submit("peek", ex[0].block, read_extents=ex)
+        assert res == bytes([65 + shard]) * 4
+        assert where == f"storage{shard}"  # routed to the owning shard
+    assert off.stats.affinity_routed == 3
+    assert fs.file_shard("/f0") == 0  # pinned placement query agrees
+    # extent-less tasks take the least-outstanding FALLBACK (no affinity)
+    for e in engines:
+        e.register_stub("noop", lambda io: 7)
+    res, where = off.submit("noop")
+    assert res == 7
+    assert where.startswith("storage")
+    assert off.stats.affinity_routed == 3  # fallback did not count as affinity
+
+
+def test_compaction_lands_on_shard_owning_its_extents():
+    """A pinned tenant's flush AND compaction tasks all run on the engine
+    owning its stripe; the other engine never sees its I/O."""
+    _, fs, fabric, engines, off = build_plane(
+        2, shards=2, lb_policy="placement_affinity", blocks=1 << 17
+    )
+    cfg = DBConfig(memtable_bytes=4 * 1024, sstable_target_bytes=16 * 1024,
+                   base_level_bytes=48 * 1024, l0_trigger=3,
+                   namespace="/a", placement_shard=1)
+    db = OffloadDB(fs, off, cfg)
+    for i in range(3000):
+        db.put(f"k{i % 400:05d}".encode(), b"v" * 40)
+    db.flush_all()
+    assert db.stats["flushes"] > 0 and db.stats["compactions"] > 0
+    assert off.stats.offloaded > 0
+    assert engines[1].tasks_run == off.stats.offloaded  # all on shard 1
+    assert engines[0].tasks_run == 0  # the co-tenant engine stays cold
+    assert off.stats.affinity_routed == off.stats.submitted
+    # every file the tenant owns sits on its pinned stripe (no spills)
+    for p in fs.listdir("/a/"):
+        for e in fs.stat(p).extents:
+            assert fs.extmgr.shard_of(e.block) == 1
+    assert fs.extmgr.spills == 0
+
+
+def test_striped_wal_segments_ship_to_owning_shard():
+    """Async WAL shipping on a striped volume: sealed segments land on the
+    target whose stripe owns the WAL's blocks (not round-robin)."""
+    _, fs, fabric, engines, off = build_plane(
+        2, shards=2, lb_policy="placement_affinity", blocks=1 << 17
+    )
+    cfg = DBConfig(memtable_bytes=1 << 20, async_wal=True,
+                   wal_segment_bytes=4 * BLOCK_SIZE,
+                   namespace="/w", placement_shard=0)
+    db = OffloadDB(fs, off, cfg)
+    for i in range(2000):
+        db.put(f"k{i:06d}".encode(), b"v" * 64)
+    db.wal.wait_durable()
+    fabric.drain()
+    assert engines[0].wal_segments > 0
+    assert engines[1].wal_segments == 0  # pinned: never the other shard
+    assert db.get(b"k000000") == b"v" * 64
+
+
+def test_striped_mount_preserves_placement():
+    """Superblock round-trip: shard count, per-file pins and per-extent
+    shard ids all survive flush_metadata + mount."""
+    dev, fs, fabric, engines, off = build_plane(2, shards=2)
+    fs.create("/pin", shard=1)
+    fs.write("/pin", b"m" * BLOCK_SIZE * 3, 0)
+    fs.flush_metadata()
+    fs2 = OffloadFS.mount(dev, node="init0")
+    assert fs2.shards == 2
+    ino = fs2.stat("/pin")
+    assert ino.shard == 1
+    assert fs2.file_shard("/pin") == 1  # placement query survives mount
+    assert all(e.shard == 1 and fs2.extmgr.shard_of(e.block) == 1
+               for e in ino.extents)
+    # new allocations still honour the pin after re-mount
+    fs2.fallocate("/pin", BLOCK_SIZE * 8)
+    assert all(e.shard == 1 for e in fs2.stat("/pin").extents)
+    assert fs2.read("/pin", 0, 4) == b"mmmm"
 
 
 # ---------------------------------------- M initiators × N threads stress

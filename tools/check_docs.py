@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Docs link/reference checker (no dependencies) — the CI ``docs`` job.
+
+Scans ``docs/*.md`` and ``README.md`` for:
+
+  * markdown links ``[text](target)``: every internal target (no URL
+    scheme, ``#anchor`` stripped) must exist relative to the file;
+  * code references in backticks that look like repo paths
+    (``src/repro/core/fs.py``, ``tests/test_property.py``,
+    ``docs/ARCHITECTURE.md``, ...): the path must exist at the repo root;
+  * dotted module references in backticks (``repro.sim.kvmodel``,
+    ``benchmarks.run``): the module must resolve under ``src/`` or the
+    repo root.
+
+Exit code = number of broken references; each is printed as
+``file:line: message``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+# backticked tokens that look like repo file paths: at least one '/', a
+# known extension, and no spaces/wildcards/placeholders
+PATH_RE = re.compile(r"^[\w./-]+\.(py|md|toml|yml|yaml|csv|json|jsonl)$")
+MODULE_RE = re.compile(r"^(repro|benchmarks|tests|tools)(\.\w+)+$")
+
+
+def check_file(md: Path) -> list:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1).strip()
+            if "://" in target or target.startswith(("mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                errors.append(f"{md.relative_to(ROOT)}:{lineno}: "
+                              f"broken link -> {target}")
+        for m in CODE_RE.finditer(line):
+            tok = m.group(0)[1:-1].strip()
+            if "*" in tok or "{" in tok or " " in tok:
+                continue  # glob/placeholder/command, not a reference
+            if PATH_RE.match(tok) and "/" in tok:
+                if not (ROOT / tok).exists():
+                    errors.append(f"{md.relative_to(ROOT)}:{lineno}: "
+                                  f"missing file reference -> {tok}")
+            elif MODULE_RE.match(tok):
+                rel = Path(tok.replace(".", "/"))
+                candidates = [
+                    ROOT / "src" / rel.with_suffix(".py"),
+                    ROOT / "src" / rel / "__init__.py",
+                    ROOT / rel.with_suffix(".py"),
+                    ROOT / rel / "__init__.py",
+                ]
+                if not any(c.exists() for c in candidates):
+                    errors.append(f"{md.relative_to(ROOT)}:{lineno}: "
+                                  f"unresolvable module reference -> {tok}")
+    return errors
+
+
+def main() -> int:
+    files = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+    errors = []
+    for md in files:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e)
+    print(f"checked {len(files)} files, {len(errors)} broken references")
+    return min(len(errors), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
