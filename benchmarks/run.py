@@ -32,6 +32,7 @@ MODULES = [
     "benchmarks.fig14_sharded_plane",
     "benchmarks.fig15_async_wal",
     "benchmarks.fig16_striped_extents",
+    "benchmarks.fig17_rebalance",
     "benchmarks.roofline_report",
 ]
 
@@ -40,6 +41,7 @@ SMOKE_MODULES = [
     "benchmarks.fig14_sharded_plane",
     "benchmarks.fig15_async_wal",
     "benchmarks.fig16_striped_extents",
+    "benchmarks.fig17_rebalance",
     "benchmarks.roofline_report",
 ]
 

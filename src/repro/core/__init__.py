@@ -16,6 +16,7 @@ from repro.core.fs import OffloadFS  # noqa: F401
 from repro.core.rpc import RpcFabric  # noqa: F401
 from repro.core.engine import OffloadEngine  # noqa: F401
 from repro.core.offloader import TaskOffloader  # noqa: F401
+from repro.core.rebalance import StripeRebalancer  # noqa: F401
 from repro.core.admission import (  # noqa: F401
     AcceptAll,
     CPUThreshold,

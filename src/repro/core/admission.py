@@ -19,6 +19,29 @@ from collections import deque
 from typing import Callable, Dict, Optional
 
 
+class EwmaGauge:
+    """Exponentially-weighted moving average of a sampled gauge.
+
+    The admission/offload plane samples per-target queue depth at every
+    submit begin/end; the EWMA smooths the bursty raw depth into the
+    FIFO-pressure telemetry the stripe rebalancer consumes (a single deep
+    burst must not trigger a migration storm, but sustained skew must).
+    Not thread-safe on its own — callers update under their own lock.
+    """
+
+    def __init__(self, alpha: float = 0.2, value: float = 0.0):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.alpha = alpha
+        self.value = value
+        self.samples = 0
+
+    def update(self, sample: float) -> float:
+        self.value += self.alpha * (sample - self.value)
+        self.samples += 1
+        return self.value
+
+
 class AdmissionPolicy:
     name = "base"
 

@@ -109,14 +109,18 @@ class ExtentManager:
             for k in order:
                 if need <= 0:
                     break
-                if shard is not None and k != shard and need > 0:
-                    spilled = True
                 free = self._free[k]
                 i = 0
                 while need > 0 and i < len(free):
                     start, length = free[i]
                     take = min(length, need)
                     out.append(Extent(0, start, take, k))
+                    if shard is not None and k != shard:
+                        # a spill is blocks actually TAKEN from a foreign
+                        # stripe — merely visiting an exhausted stripe with
+                        # need outstanding contributes nothing and must not
+                        # count (it would inflate the placement-miss metric)
+                        spilled = True
                     if take == length:
                         free.pop(i)
                     else:
@@ -165,9 +169,20 @@ class ExtentManager:
         return bisect.bisect_right(self._bounds, block) - 1
 
     def free(self, extents: List[Extent]):
+        """Return runs to their stripes' free lists. A run persisted under
+        an older stripe layout and freed after a re-mount with a different
+        ``shards=`` may cross today's boundaries — split per stripe the way
+        ``carve`` does, or the whole run would land in the stripe of its
+        start block and corrupt per-shard accounting."""
         with self._lock:
             for e in extents:
-                self._free_run(e.block, e.nblocks)
+                start, length = e.block, e.nblocks
+                while length > 0:
+                    k = self._shard_of_unlocked(start)
+                    piece = min(length, self._bounds[k + 1] - start)
+                    self._free_run(start, piece)
+                    start += piece
+                    length -= piece
 
     def carve(self, start: int, length: int) -> None:
         """Remove a specific run from the free list (mount-time rebuild).

@@ -57,6 +57,16 @@ class LeaseViolation(Exception):
     pass
 
 
+class MigrationCrash(BaseException):
+    """Raised by a migration failpoint to simulate a mid-migration crash.
+
+    Derives from BaseException so ``migrate_file``'s rollback handler (which
+    catches Exception) does NOT run: the process state is abandoned exactly
+    as a real crash would leave it, and recovery happens through re-mount +
+    lease-journal replay — which is what the failpoint tests verify.
+    """
+
+
 SB_BLOCKS = 64  # superblock area (metadata + lease journal), 256 KiB
 SB_META_BLOCKS = 48  # metadata pickle lives in blocks [0, 48)
 SB_JOURNAL_BLOCK = SB_META_BLOCKS  # lease journal lives in blocks [48, 64)
@@ -250,6 +260,12 @@ class OffloadFS:
         # reclaim orphaned leases without scanning
         self.lease_journal = LeaseJournal(dev, node=node)
         self._orphans: Dict[int, Lease] = {}  # journaled leases from a crash
+        # stripe migration (copy → swap → free) accounting + test failpoint:
+        # when set, called with a stage name ("pre_copy" / "post_copy" /
+        # "post_swap"); raising MigrationCrash simulates a crash there
+        self.migrations = 0
+        self.migrated_blocks = 0
+        self._migration_failpoint = None
 
     # --------------------------------------------------------------- clock
     def _tick(self) -> float:
@@ -292,11 +308,19 @@ class OffloadFS:
                 self.lease_journal._write_all()
 
     @classmethod
-    def mount(cls, dev: BlockDevice, *, node: str = "initiator0") -> "OffloadFS":
+    def mount(cls, dev: BlockDevice, *, node: str = "initiator0",
+              shards: Optional[int] = None) -> "OffloadFS":
+        """Re-mount a persisted volume. ``shards=None`` restores the stripe
+        count the superblock recorded (pre-striping superblocks mount flat);
+        an explicit ``shards=N`` RE-STRIPES the volume online: the allocator
+        is rebuilt with N stripes, persisted extents keep their data (runs
+        from the old layout may straddle the new boundaries — ``carve`` and
+        ``free`` both split per stripe), and stale per-extent shard ids and
+        per-file pins are re-derived from the new authoritative map."""
         import pickle as _pkl
         import zlib
 
-        fs = cls(dev, node=node)
+        fs = cls(dev, node=node, shards=shards or 1)
         raw = dev.read_blocks(0, SB_META_BLOCKS, node=node)
         size = int.from_bytes(raw[:8], "little")
         if size == 0 or size > SB_META_BLOCKS * BLOCK_SIZE:
@@ -310,7 +334,9 @@ class OffloadFS:
         meta = _pkl.loads(blob)
         fs._names = dict(meta["names"])
         fs._clock = meta["clock"]
-        fs.shards = meta.get("shards", 1)  # pre-striping superblocks: flat
+        persisted = meta.get("shards", 1)  # pre-striping superblocks: flat
+        fs.shards = persisted if shards is None else shards
+        restripe = shards is not None and shards != persisted
         # rebuild the free lists: everything minus used extents
         fs.extmgr = ExtentManager(dev.num_blocks, reserved=SB_BLOCKS,
                                   shards=fs.shards)
@@ -320,11 +346,32 @@ class OffloadFS:
             # pre-striping records are (path, size, mtime, 3-tuple extents)
             path, size_, mtime, exts = rec[:4]
             file_shard = rec[4] if len(rec) > 4 else None
-            extents = [
-                Extent(t[0], t[1], t[2],
-                       t[3] if len(t) > 3 else fs.extmgr.shard_of(t[1]))
-                for t in exts
-            ]
+            extents = []
+            for t in exts:
+                off_, blk, n = t[0], t[1], t[2]
+                if not restripe:
+                    extents.append(Extent(off_, blk, n,
+                                          t[3] if len(t) > 3
+                                          else fs.extmgr.shard_of(blk)))
+                    continue
+                # an old-layout run may straddle the NEW boundaries: split
+                # it per stripe (like carve/free do) so every extent's
+                # carried shard id stays honest — one start-derived id for
+                # the whole run would mis-route placement affinity and make
+                # the foreign-stripe tail unmigratable
+                while n > 0:
+                    k = fs.extmgr.shard_of(blk)
+                    take = min(n, fs.extmgr.stripe_range(k)[1] - blk)
+                    extents.append(Extent(off_, blk, take, k))
+                    off_ += take
+                    blk += take
+                    n -= take
+            if restripe:
+                # the old pin indexes a layout that no longer exists:
+                # re-derive from where the blocks actually sit today
+                file_shard = fs.shard_of_extents(extents)
+            elif file_shard is not None and file_shard >= fs.shards:
+                file_shard = None  # defensive: never pin out of range
             fs._inodes[i] = Inode(i, path, size_, mtime, extents, file_shard)
             used.extend(extents)
             max_ino = max(max_ino, i)
@@ -425,7 +472,37 @@ class OffloadFS:
                 self.dev.trim(e.block, e.nblocks)
 
     def rename(self, old: str, new: str) -> None:
+        """POSIX-style rename: an existing destination is replaced and its
+        inode + blocks are freed like ``delete()`` (previously they leaked
+        forever), guarded by the same lease check — clobbering a file whose
+        blocks a task is still writing would corrupt the lease discipline."""
         with self._lock:
+            if old not in self._names:
+                raise FileNotFoundError(old)
+            if new == old:
+                return
+            if new in self._names:
+                victim = self._inodes[self._names[new]]
+                victim_blocks = {
+                    b for e in victim.extents
+                    for b in range(e.block, e.block + e.nblocks)
+                }
+                self._check_not_leased(victim_blocks)  # write leases
+                for other in self._leases.values():
+                    held = other.read_blocks & victim_blocks
+                    if held:
+                        # freeing + trimming under an active reader would
+                        # corrupt its input (same hazard migrate_file fences)
+                        raise LeaseViolation(
+                            f"block {min(held)} read-leased to task "
+                            f"{other.task_id}: rename would free it under "
+                            "the reader"
+                        )
+                del self._names[new]
+                del self._inodes[victim.ino]
+                self.extmgr.free(victim.extents)
+                for e in victim.extents:
+                    self.dev.trim(e.block, e.nblocks)
             ino = self._names.pop(old)
             self._names[new] = ino
             self._inodes[ino].path = new
@@ -494,6 +571,140 @@ class OffloadFS:
             return None
         # most blocks wins; ties break to the smaller shard id (determinism)
         return min(weights, key=lambda k: (-weights[k], k))
+
+    def migrate_file(self, path: str, dst_shard: int) -> Dict[str, int]:
+        """Move a file's blocks onto stripe ``dst_shard`` and re-pin it
+        there (the rebalancer's copy → swap → free cycle). Crash-safe
+        through the lease journal:
+
+          1. destination extents are allocated (``alloc(n, shard=dst)``)
+             and a WRITE lease over them is journaled;
+          2. every block is copied source → destination under that lease
+             (reads of the file keep working: its extents still point at
+             the source);
+          3. the inode's extent tree + pin swap to the destination and the
+             superblock is flushed — THE commit point;
+          4. the lease is released and the source runs are freed + trimmed.
+
+        A crash before step 3 re-mounts to the old placement: the copied
+        blocks belong to no inode (they return to the free list on rebuild)
+        and ``reclaim_orphans()`` fences their journaled lease. A crash
+        after step 3 re-mounts to the new placement: the source blocks
+        belong to no inode, and the orphaned destination lease is fenced
+        the same way. Either way the file is byte-identical — remount sees
+        old or new placement, never a mix.
+        """
+        with self._lock:
+            if not 0 <= dst_shard < self.shards:
+                raise ValueError(
+                    f"shard {dst_shard} out of range [0, {self.shards})"
+                )
+            if path not in self._names:
+                # the caller's placement scan can race a delete (e.g. a
+                # compaction dropping an SSTable): surface it typed so the
+                # rebalancer can skip the vanished file, not crash the round
+                raise FileNotFoundError(path)
+            inode = self._inodes[self._names[path]]
+            old_extents = list(inode.extents)
+            nblocks = sum(e.nblocks for e in old_extents)
+            if nblocks == 0 or (
+                inode.shard == dst_shard
+                and all(e.shard == dst_shard for e in old_extents)
+            ):
+                inode.shard = dst_shard  # nothing to move: just re-pin
+                return {"blocks": 0, "dst": dst_shard}
+            src_shard = self.shard_of_extents(old_extents)
+            old_pin = inode.shard
+            # the source must be quiescent: a writer would race the copy,
+            # and a READER would see its leased blocks freed + trimmed
+            # after the swap (the caller skips leased files, never forces)
+            src_blocks = {
+                b for e in old_extents
+                for b in range(e.block, e.block + e.nblocks)
+            }
+            self._check_not_leased(src_blocks)  # write leases
+            for other in self._leases.values():
+                held = other.read_blocks & src_blocks
+                if held:
+                    raise LeaseViolation(
+                        f"block {min(held)} read-leased to task "
+                        f"{other.task_id}: migration would free it under "
+                        "the reader"
+                    )
+            new_raw = self.extmgr.alloc(nblocks, shard=dst_shard)
+            try:
+                lease = self.grant_lease((), new_raw)  # journaled grant
+            except BaseException:
+                self.extmgr.free(new_raw)
+                raise
+            # rebase the destination runs onto the file's offsets and pair
+            # each (src, dst) copy run
+            new_extents: List[Extent] = []
+            copies: List[Tuple[int, int, int]] = []  # (src, dst, nblocks)
+            queue = [(e.block, e.nblocks) for e in new_raw]
+            for oe in sorted(old_extents, key=lambda e: e.file_offset):
+                off, src, rem = oe.file_offset, oe.block, oe.nblocks
+                while rem > 0:
+                    blk, avail = queue[0]
+                    take = min(rem, avail)
+                    new_extents.append(
+                        Extent(off, blk, take, self.extmgr.shard_of(blk))
+                    )
+                    copies.append((src, blk, take))
+                    queue[0] = (blk + take, avail - take)
+                    if queue[0][1] == 0:
+                        queue.pop(0)
+                    off += take
+                    src += take
+                    rem -= take
+            committed = False
+            try:
+                if self._migration_failpoint:
+                    self._migration_failpoint("pre_copy")
+                for src, dst, n in copies:
+                    data = self.dev.read_blocks(src, n, node=self.node)
+                    self.authorized_write(lease, dst, data, node=self.node)
+                if self._migration_failpoint:
+                    self._migration_failpoint("post_copy")
+                inode.extents = new_extents
+                inode.shard = dst_shard
+                inode.mtime = self._tick()
+                self.flush_metadata()  # commit point: new placement durable
+                committed = True
+                if self._migration_failpoint:
+                    self._migration_failpoint("post_swap")
+            except Exception:
+                if not committed:
+                    # failed migration (not a simulated crash): roll back —
+                    # old placement restored, lease released, copy reclaimed
+                    # (trimmed: the partial copy must not leak file bytes
+                    # into blocks a later fallocate hands someone else)
+                    inode.extents = old_extents
+                    inode.shard = old_pin
+                    self.release_lease(lease)
+                    self.extmgr.free(new_raw)
+                    for e in new_raw:
+                        self.dev.trim(e.block, e.nblocks)
+                    raise
+                # past the commit point the swap is already durable: rolling
+                # back in memory would free blocks the on-disk superblock
+                # references — finish the cycle instead, then propagate
+                self.release_lease(lease)
+                self.extmgr.free(old_extents)
+                for e in old_extents:
+                    self.dev.trim(e.block, e.nblocks)
+                raise
+            self.release_lease(lease)
+            self.extmgr.free(old_extents)
+            for e in old_extents:
+                self.dev.trim(e.block, e.nblocks)
+            self.migrations += 1
+            self.migrated_blocks += nblocks
+            return {
+                "blocks": nblocks,
+                "src": -1 if src_shard is None else src_shard,
+                "dst": dst_shard,
+            }
 
     # ------------------------------------------------------------ file IO
     def _extent_blocks(self, inode: Inode, offset: int, length: int):

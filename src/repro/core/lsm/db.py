@@ -126,6 +126,7 @@ class OffloadDB:
                       "wal_bytes": 0, "flush_rpc_payload": 0}
         self.read_stats = {"mem": 0, "imm": 0, "l0": 0, "ln": 0, "absent": 0}
         self.orphans_reclaimed: List[int] = []
+        self.rebalancer = None  # attach_rebalancer: drains cold SSTables
         self.wal_shipper = self._make_shipper()
         self._new_wal()
         if register_stubs and offloader is not None:
@@ -283,7 +284,12 @@ class OffloadDB:
         exts = []
         for p in read_paths:
             exts.extend(self.fs.stat(p).extents)
-        return self.fs.shard_of_extents(exts)
+        shard = self.fs.shard_of_extents(exts)
+        if shard is not None and self.rebalancer is not None:
+            # placement steering: an unpinned instance would otherwise pile
+            # its whole L1 back onto the dominant input stripe every round
+            shard = self.rebalancer.steer(shard)
+        return shard
 
     def _alloc_outputs(self, total_bytes: int,
                        shard: Optional[int] = None) -> List[dict]:
@@ -542,6 +548,33 @@ class OffloadDB:
             except BaseException:
                 self._abort_jobs(jobs)
                 raise
+            # between compaction rounds: realign placement with load —
+            # drain cold SSTables off stripes whose FIFO pressure skews
+            if self.rebalancer is not None:
+                self.drain_cold_tables()
+
+    # --------------------------------------------------------- rebalancing
+    def attach_rebalancer(self, rebalancer) -> None:
+        """Wire a ``StripeRebalancer``; ``maybe_compact`` then drains cold
+        SSTables off hot stripes between compaction rounds."""
+        self.rebalancer = rebalancer
+
+    def drain_cold_tables(self, *, max_tables: int = 2) -> list:
+        """Migrate COLD SSTables — levels ≥ 1; L0, the pinned immutable
+        memtables and the active WAL are write-hot and stay put — off
+        stripes whose pressure exceeds the rebalancer's skew threshold.
+        Table ids, the MANIFEST and readers are untouched: migration moves
+        blocks, not paths. Returns the migrations performed."""
+        if self.rebalancer is None or self.fs.shards <= 1:
+            return []
+        cold = [
+            self.tables[t].path
+            for lvl in range(1, self.cfg.max_level + 1)
+            for t in self.levels[lvl]
+        ]
+        if not cold:
+            return []
+        return self.rebalancer.rebalance(max_files=max_tables, paths=cold)
 
     # -- L0 (+ deferred WAL runs) + overlapping L1 → new L1 tables
     def _prep_l0_job(self) -> Optional[dict]:
@@ -701,6 +734,7 @@ class OffloadDB:
         db.stats = {"stall_events": 0, "flushes": 0, "compactions": 0,
                     "wal_bytes": 0, "flush_rpc_payload": 0}
         db.read_stats = {"mem": 0, "imm": 0, "l0": 0, "ln": 0, "absent": 0}
+        db.rebalancer = None
         live_logs: Dict[int, str] = {}
         active_gen, active_path = 0, None
         max_tid = 0

@@ -37,6 +37,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from repro.core.admission import EwmaGauge
 from repro.core.blockdev import BLOCK_SIZE
 from repro.core.engine import OffloadEngine
 from repro.core.fs import Extent, Lease, OffloadFS
@@ -86,6 +87,18 @@ class TaskOffloader:
         self._lock = threading.Lock()
         self._outstanding: Dict[str, int] = {t: 0 for t in self.targets}
         self._reject_streak: Dict[str, int] = {t: 0 for t in self.targets}
+        # per-target queue-depth EWMAs, sampled at every submit begin/end:
+        # task depth (how many in flight) and BLOCK depth (how many leased
+        # blocks in flight — the bytes actually queued on the target's NVMe
+        # FIFO, which is the pressure signal the stripe rebalancer consumes;
+        # one huge compaction outweighs many tiny tasks)
+        self._depth_ewma: Dict[str, EwmaGauge] = {
+            t: EwmaGauge() for t in self.targets
+        }
+        self._outstanding_blocks: Dict[str, int] = {t: 0 for t in self.targets}
+        self._qblocks_ewma: Dict[str, EwmaGauge] = {
+            t: EwmaGauge() for t in self.targets
+        }
         self._rr = 0
 
     # ----------------------------------------------------- target registry
@@ -95,10 +108,37 @@ class TaskOffloader:
                 self.targets.append(name)
                 self._outstanding[name] = 0
                 self._reject_streak[name] = 0
+                self._depth_ewma[name] = EwmaGauge()
+                self._outstanding_blocks[name] = 0
+                self._qblocks_ewma[name] = EwmaGauge()
 
     def outstanding(self) -> Dict[str, int]:
         with self._lock:
             return dict(self._outstanding)
+
+    # ----------------------------------------------------------- telemetry
+    def queue_depth_ewma(self) -> Dict[str, float]:
+        """Smoothed in-flight task depth per target."""
+        with self._lock:
+            return {t: g.value for t, g in self._depth_ewma.items()}
+
+    def queue_blocks_ewma(self) -> Dict[str, float]:
+        """Smoothed in-flight LEASED BLOCKS per target — the depth of the
+        target's NVMe FIFO in device blocks, the rebalancer's raw signal."""
+        with self._lock:
+            return {t: g.value for t, g in self._qblocks_ewma.items()}
+
+    def shard_utilization(self) -> Dict[int, float]:
+        """Per-stripe FIFO-pressure view of the telemetry: stripe k's
+        pressure is its owning target's block-depth EWMA (engines register
+        in stripe order, so the mapping is positional — the inverse of
+        ``target_for_shard``)."""
+        depths = self.queue_blocks_ewma()
+        n = len(self.targets)
+        return {
+            k: depths.get(self.targets[k % n], 0.0)
+            for k in range(max(1, self.fs.shards))
+        }
 
     def pick_target(self) -> str:
         """Load-balanced target choice (never the initiator itself)."""
@@ -142,15 +182,41 @@ class TaskOffloader:
                 return self.target_for_shard(shard)
         return self.pick_target()
 
-    def _begin(self, dst: str) -> None:
+    @staticmethod
+    def _lease_blocks(lease: Lease) -> int:
+        return len(lease.read_blocks | lease.write_blocks)
+
+    def _sample_telemetry_locked(self) -> None:
+        """Fold EVERY target's current depth into its gauges (lock held).
+        Sampling only the submitting target would freeze an idle target's
+        EWMA at its last peak — the rebalancer would then chase a stripe
+        that stopped being hot long ago."""
+        for t, g in self._depth_ewma.items():
+            g.update(self._outstanding.get(t, 0))
+        for t, g in self._qblocks_ewma.items():
+            g.update(self._outstanding_blocks.get(t, 0))
+
+    def _begin(self, dst: str, blocks: int = 0) -> None:
         with self._lock:
             self.stats.submitted += 1
             self._outstanding[dst] = self._outstanding.get(dst, 0) + 1
+            self._outstanding_blocks[dst] = (
+                self._outstanding_blocks.get(dst, 0) + blocks
+            )
+            self._depth_ewma.setdefault(dst, EwmaGauge())
+            self._qblocks_ewma.setdefault(dst, EwmaGauge())
+            self._sample_telemetry_locked()
 
-    def _end(self, dst: str, outcome: str) -> None:
+    def _end(self, dst: str, outcome: str, blocks: int = 0) -> None:
         """outcome ∈ {offloaded, rejected, error}."""
         with self._lock:
             self._outstanding[dst] = max(0, self._outstanding.get(dst, 1) - 1)
+            self._outstanding_blocks[dst] = max(
+                0, self._outstanding_blocks.get(dst, blocks) - blocks
+            )
+            self._depth_ewma.setdefault(dst, EwmaGauge())
+            self._qblocks_ewma.setdefault(dst, EwmaGauge())
+            self._sample_telemetry_locked()
             if outcome == "offloaded":
                 self.stats.offloaded += 1
                 self.stats.by_target[dst] = self.stats.by_target.get(dst, 0) + 1
@@ -200,7 +266,8 @@ class TaskOffloader:
         coalesce = self.coalesce if coalesce is None else coalesce
         dst = target or self._route(read_extents, write_extents)
         lease = self.fs.grant_lease(read_extents, write_extents)
-        self._begin(dst)
+        nb = self._lease_blocks(lease)
+        self._begin(dst, nb)
         ok = False
         try:
             if coalesce:
@@ -223,16 +290,16 @@ class TaskOffloader:
                         self.fabric.call(self.node, dst, "complete", self.node)
             if admitted:
                 ok = True
-                self._end(dst, "offloaded")
+                self._end(dst, "offloaded", nb)
                 return result, dst
             # rejected → run locally on the initiator
             ok = True
-            self._end(dst, "rejected")
+            self._end(dst, "rejected", nb)
             result = self._run_local(task, lease, args, kwargs, mtime)
             return result, self.node
         finally:
             if not ok:
-                self._end(dst, "error")
+                self._end(dst, "error", nb)
             self.fs.release_lease(lease)
 
     def submit_async(
@@ -253,7 +320,8 @@ class TaskOffloader:
         form, so ``coalesce=False`` offloaders still coalesce here."""
         dst = target or self._route(read_extents, write_extents)
         lease = self.fs.grant_lease(read_extents, write_extents)
-        self._begin(dst)
+        nb = self._lease_blocks(lease)
+        self._begin(dst, nb)
         ofut = OffloadFuture()
         wire_fut: RpcFuture = self.fabric.call_async(
             self.node, dst, "submit_task", self.node, task,
@@ -264,15 +332,15 @@ class TaskOffloader:
             try:
                 exc = f.exception()
                 if exc is not None:
-                    self._end(dst, "error")
+                    self._end(dst, "error", nb)
                     ofut.set_exception(exc)
                     return
                 status, result = f.result()
                 if status == "ok":
-                    self._end(dst, "offloaded")
+                    self._end(dst, "offloaded", nb)
                     ofut.set_result((result, dst))
                     return
-                self._end(dst, "rejected")
+                self._end(dst, "rejected", nb)
                 try:
                     result = self._run_local(task, lease, args, kwargs, mtime)
                 except BaseException as e:  # noqa: BLE001
@@ -318,12 +386,12 @@ class TaskOffloader:
                 lease = self.fs.grant_lease(
                     s.get("read_extents", ()), s.get("write_extents", ())
                 )
-                self._begin(dst)
+                self._begin(dst, self._lease_blocks(lease))
                 plan.append((idx, s, dst, lease))
         except BaseException:
             # e.g. LeaseViolation mid-batch: unwind what was granted
             for _, _, d, lease in plan:
-                self._end(d, "error")
+                self._end(d, "error", self._lease_blocks(lease))
                 self.fs.release_lease(lease)
             raise
         groups: Dict[str, List[tuple]] = {}
@@ -351,18 +419,18 @@ class TaskOffloader:
                 results = fut.result()
             except BaseException as e:  # noqa: BLE001
                 for (_, _, _, lease) in entries:
-                    self._end(dst, "error")
+                    self._end(dst, "error", self._lease_blocks(lease))
                     self.fs.release_lease(lease)
                 if first_exc is None:
                     first_exc = e
                 continue
             for (idx, s, _, lease), (status, result) in zip(entries, results):
                 if status == "ok":
-                    self._end(dst, "offloaded")
+                    self._end(dst, "offloaded", self._lease_blocks(lease))
                     out[idx] = (result, dst)
                     self.fs.release_lease(lease)
                 else:
-                    self._end(dst, "rejected")
+                    self._end(dst, "rejected", self._lease_blocks(lease))
                     pending_local.append((idx, s, lease))
         if first_exc is not None:
             for (_, _, lease) in pending_local:

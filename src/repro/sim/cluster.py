@@ -164,6 +164,20 @@ class Cluster:
         yield from self.net_transfer(initiator, nbytes, target=target)
         yield ("use", self.nvme_w_t[target], nbytes)
 
+    def rebalance(self, initiator: int, nbytes: float, *,
+                  src: int = 0, dst: int = 0):
+        """Online stripe migration (copy → swap → free, PR 4): the
+        initiator drives the copy, so the moved bytes drain the SOURCE
+        shard's NVMe read FIFO, cross the initiator's link twice (read
+        back + write out) and land on the DESTINATION shard's write FIFO;
+        one RPC covers the journaled lease grant + superblock commit.
+        Spawned as a background process — foreground ops never join it."""
+        yield from self.rpc(initiator, 4096, target=src)
+        yield ("use", self.nvme_r_t[src], nbytes)
+        yield from self.net_transfer(initiator, nbytes, target=src)
+        yield from self.net_transfer(initiator, nbytes, target=dst)
+        yield ("use", self.nvme_w_t[dst], nbytes)
+
     def crash_remount(self, initiator: int, *, journal_records: int = 0,
                       meta_bytes: float = 256 * 1024, target: int = 0):
         """Initiator crash/re-mount: re-read the superblock area (metadata

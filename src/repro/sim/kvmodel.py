@@ -25,6 +25,11 @@ Mechanics (why the paper's effects emerge here):
     (placement affinity), each target with its own CPU pool, links and
     NVMe FIFOs — the Fig. 8 shard-count sweep shows the single-target
     saturation knee moving out as targets are added.
+  * ``shard_skew`` / ``rebalance_at`` model the dynamic stripe rebalancer
+    (PR 4): zipf-skewed placement concentrates the fleet's I/O on one
+    storage target; at the trigger point each mis-placed instance pays
+    background migration I/O (``Cluster.rebalance``) and flips to uniform
+    placement — Fig. 17 measures the throughput recovery.
 """
 from __future__ import annotations
 
@@ -80,6 +85,17 @@ class KVParams:
     # striped offload plane: N storage targets, initiator i's placement-
     # affine I/O lands on target i % n_storage (disjoint FIFOs per shard)
     n_storage: int = 1
+    # skewed placement (PR 4): with shard_skew = s > 0 the initiators'
+    # placement targets are assigned by zipf weights (k+1)^-s instead of
+    # uniformly — a hot stripe serves most of the fleet's I/O while its
+    # neighbours idle (the imbalance the rebalancer exists to fix)
+    shard_skew: float = 0.0
+    # dynamic rebalancing: after `rebalance_at` fraction of an instance's
+    # ops its placement migrates to the uniform target (the rebalancer's
+    # copy-swap-free cycle, paying `rebalance_bytes` of background
+    # migration I/O via Cluster.rebalance); 0.0 = static placement
+    rebalance_at: float = 0.0
+    rebalance_bytes: float = 32 * MB
 
 
 @dataclass
@@ -128,9 +144,29 @@ def run_kv(params: KVParams, *, instances: int = 1,
     cl = Cluster(sim, spec, n_initiators=n_nodes, n_storage=n_storage)
     peer_id = n_nodes - 1
 
+    def zipf_target(i: int) -> int:
+        """Deterministic zipf-weighted placement: instance i lands on the
+        shard whose cumulative weight bucket covers its index (heavy
+        stripes early — shard 0 takes the biggest share)."""
+        w = [(k + 1) ** -params.shard_skew for k in range(n_storage)]
+        tot = sum(w)
+        x = (i + 0.5) / max(1, instances)
+        acc = 0.0
+        for k in range(n_storage):
+            acc += w[k] / tot
+            if x <= acc:
+                return k
+        return n_storage - 1
+
+    placement = [
+        zipf_target(i) if params.shard_skew > 0 else i % n_storage
+        for i in range(instances)
+    ]
+
     def tg(i: int) -> int:
-        """Placement affinity: initiator i's storage target (shard)."""
-        return i % n_storage
+        """Placement affinity: initiator i's storage target (shard) —
+        dynamic when the rebalancer migrates the instance's files."""
+        return placement[i]
 
     dirlock = sim.resource("dirlock", 1.0 / spec.dlm_rtt)
     journals = [sim.resource(f"journal{i}", 1.0) for i in range(instances)]
@@ -261,6 +297,8 @@ def run_kv(params: KVParams, *, instances: int = 1,
             state["net_bytes"] += 2 * size
 
     fill = [0.0] * instances
+    ops_done = [0] * instances
+    rebalanced = [False] * instances
     flush_count = [0] * instances
     level_counters = [[0] * (params.levels + 1) for _ in range(instances)]
     last_job = [[None] * (params.levels + 1) for _ in range(instances)]
@@ -271,6 +309,18 @@ def run_kv(params: KVParams, *, instances: int = 1,
             n = min(params.batch, ops_left)
             ops_left -= n
             t0 = sim.now
+            ops_done[i] += n
+            if (params.rebalance_at > 0 and not rebalanced[i]
+                    and ops_done[i] >= params.rebalance_at * params.n_ops):
+                # the rebalancer migrates this instance's files to the
+                # uniform stripe: background copy I/O, then placement flips
+                rebalanced[i] = True
+                uniform = i % n_storage
+                if placement[i] != uniform:
+                    sim.spawn(cl.rebalance(i, params.rebalance_bytes,
+                                           src=placement[i], dst=uniform))
+                    state["net_bytes"] += 2 * params.rebalance_bytes
+                    placement[i] = uniform
             nw = round(n * params.write_ratio)
             nr = n - nw
             yield from cl.cpu_work(i, n * spec.kv_cpu_per_op)

@@ -175,3 +175,61 @@ def test_token_ring_bounds_and_fairness(seed):
                 admitted[n] += 1
             assert len(ring.holders()) <= n_tokens  # never over-issued
     assert all(v > 0 for v in admitted.values())  # TTL reclaim → fairness
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_restripe_remount_accounting(seed):
+    """Alloc/free/remount cycles across CHANGED shard counts preserve
+    exact global and per-shard accounting: runs persisted under the old
+    layout may straddle the new boundaries, and both carve (mount) and
+    free (delete) must split them per stripe."""
+    from repro.core.blockdev import BLOCK_SIZE
+
+    rng = random.Random(seed)
+    shards_a, shards_b = rng.choice(
+        [(1, 4), (4, 2), (2, 8), (8, 1), (4, 4), (1, 8)]
+    )
+    dev = BlockDevice(1 << 13)
+    fs = OffloadFS(dev, node="i", shards=shards_a)
+    files = {}
+    for i in range(14):
+        p = f"/f{i}"
+        shard = rng.randrange(shards_a) if rng.random() < 0.7 else None
+        fs.create(p, shard=shard)
+        data = bytes([rng.randrange(1, 256)]) * (rng.randrange(1, 40) * BLOCK_SIZE)
+        fs.write(p, data, 0)
+        files[p] = data
+    for p in rng.sample(sorted(files), 4):
+        fs.delete(p)
+        del files[p]
+    fs.flush_metadata()
+    fs2 = OffloadFS.mount(dev, node="i", shards=shards_b)
+    assert fs2.shards == shards_b
+    for p, d in files.items():  # content survives re-striping
+        assert fs2.read(p) == d
+    # per-shard accounting exact against the authoritative block→stripe map
+    for k in range(shards_b):
+        lo, hi = fs2.extmgr.stripe_range(k)
+        used_k = sum(
+            1
+            for p in files
+            for e in fs2.stat(p).extents
+            for b in range(e.block, e.block + e.nblocks)
+            if lo <= b < hi
+        )
+        assert fs2.extmgr.free_blocks_in(k) == (hi - lo) - used_k
+    # carried shard ids were re-derived from the new layout
+    for p in files:
+        for e in fs2.stat(p).extents:
+            assert e.shard == fs2.extmgr.shard_of(e.block)
+    # alloc under the new layout, free everything: exact full-volume cleanup
+    exts = fs2.extmgr.alloc(rng.randrange(1, 50),
+                            shard=rng.randrange(shards_b))
+    fs2.extmgr.free(exts)
+    for p in sorted(files):
+        fs2.delete(p)
+    assert fs2.extmgr.free_blocks == dev.num_blocks - fs2.extmgr.reserved
+    for k in range(shards_b):
+        lo, hi = fs2.extmgr.stripe_range(k)
+        assert fs2.extmgr.free_blocks_in(k) == hi - lo
+        assert fs2.extmgr.fragmentation(k) == 1

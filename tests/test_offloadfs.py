@@ -199,3 +199,118 @@ def test_rejected_offload_runs_locally():
     res, where = off.submit("peek", ex[0].block, read_extents=ex)
     assert res == b"z" and where == "init0"
     assert off.stats.rejected == 1 and off.stats.ran_local == 1
+
+
+# --------------------------------------------------- PR 4 regression fixes
+def test_rename_over_existing_frees_destination():
+    """rename() used to clobber silently: the destination inode and all its
+    blocks leaked forever. It must free them like delete() does."""
+    _, fs = make_fs()
+    fs.create("/a")
+    fs.write("/a", b"A" * BLOCK_SIZE * 2, 0)
+    fs.create("/b")
+    fs.write("/b", b"B" * BLOCK_SIZE * 3, 0)
+    free_before = fs.extmgr.free_blocks
+    n_inodes = len(fs.listdir())
+    fs.rename("/a", "/b")
+    assert fs.read("/b") == b"A" * BLOCK_SIZE * 2
+    assert not fs.exists("/a")
+    assert fs.extmgr.free_blocks == free_before + 3  # victim's blocks back
+    assert len(fs.listdir()) == n_inodes - 1  # victim inode gone
+    # freed blocks are trimmed: a later reader must not see stale bytes
+    fs.create("/c")
+    fs.write("/c", b"\x00" * BLOCK_SIZE * 3, 0)
+    assert b"B" not in fs.read("/c")
+
+
+def test_rename_over_leased_destination_raises():
+    _, fs = make_fs()
+    fs.create("/a")
+    fs.write("/a", b"A" * BLOCK_SIZE, 0)
+    fs.create("/b")
+    fs.write("/b", b"B" * BLOCK_SIZE, 0)
+    lease = fs.grant_lease([], fs.stat("/b").extents)
+    with pytest.raises(LeaseViolation):
+        fs.rename("/a", "/b")
+    fs.release_lease(lease)
+    assert fs.read("/a") == b"A" * BLOCK_SIZE  # untouched on refusal
+    fs.rename("/a", "/b")  # fine after release
+
+
+def test_rename_missing_source_and_self():
+    _, fs = make_fs()
+    with pytest.raises(FileNotFoundError):
+        fs.rename("/nope", "/x")
+    fs.create("/a")
+    fs.write("/a", b"A" * BLOCK_SIZE, 0)
+    free_before = fs.extmgr.free_blocks
+    fs.rename("/a", "/a")  # rename to self: no-op, nothing freed
+    assert fs.read("/a") == b"A" * BLOCK_SIZE
+    assert fs.extmgr.free_blocks == free_before
+
+
+def test_free_splits_runs_at_stripe_boundaries():
+    """A run persisted under an older stripe layout can cross today's
+    boundaries; free() must split it per stripe like carve() does, or the
+    whole run lands in the stripe of its start block and corrupts
+    per-shard accounting."""
+    from repro.core import Extent, ExtentManager
+
+    mgr = ExtentManager(4096, reserved=64, shards=4)
+    full = {k: mgr.free_blocks_in(k) for k in range(4)}
+    lo1, _ = mgr.stripe_range(1)
+    # simulate an old-layout run straddling the stripe-0/1 boundary
+    start, length = lo1 - 100, 250
+    mgr.carve(start, length)
+    assert mgr.free_blocks_in(0) == full[0] - 100
+    assert mgr.free_blocks_in(1) == full[1] - 150
+    mgr.free([Extent(0, start, length, 0)])
+    for k in range(4):
+        assert mgr.free_blocks_in(k) == full[k]
+        assert mgr.fragmentation(k) == 1  # boundary pieces merged back
+
+
+def test_spills_counted_only_when_foreign_blocks_taken():
+    """`spills` must count allocations that actually TOOK blocks from a
+    foreign stripe — not merely visited an exhausted one."""
+    from repro.core import ExtentManager
+
+    mgr = ExtentManager(128, reserved=0, shards=2)  # stripes [0,64) [64,128)
+    mgr.alloc(10, shard=0)
+    assert mgr.spills == 0  # fully served by the preferred stripe
+    exts = mgr.alloc(60, shard=0)  # 54 left on stripe 0 → 6 spill to 1
+    assert mgr.spills == 1
+    assert {e.shard for e in exts} == {0, 1}
+    mgr.alloc(58, shard=1)  # drains stripe 1 exactly: not a spill
+    assert mgr.spills == 1
+    with pytest.raises(IOError):
+        mgr.alloc(10, shard=1)  # volume full: failed allocs never count
+    assert mgr.spills == 1
+
+
+def test_restripe_mount_preserves_content_and_accounting():
+    """Mounting with an explicit shards= override re-stripes the volume:
+    data survives, stale pins/shard-ids are re-derived, and freeing
+    old-layout extents keeps per-stripe accounting exact."""
+    dev, fs = make_fs(blocks=1 << 13)
+    fs.create("/big")
+    fs.write("/big", b"q" * (BLOCK_SIZE * 3000), 0)
+    fs.create("/small")
+    fs.write("/small", b"r" * (BLOCK_SIZE * 10), 0)
+    fs.flush_metadata()
+    fs2 = OffloadFS.mount(dev, node="init0", shards=4)
+    assert fs2.shards == 4
+    assert fs2.read("/big") == b"q" * (BLOCK_SIZE * 3000)
+    assert fs2.read("/small") == b"r" * (BLOCK_SIZE * 10)
+    # the 3000-block extent straddles several new stripes; deleting it must
+    # split the free per stripe (the free() boundary fix)
+    fs2.delete("/big")
+    fs2.delete("/small")
+    for k in range(4):
+        lo, hi = fs2.extmgr.stripe_range(k)
+        assert fs2.extmgr.free_blocks_in(k) == hi - lo
+        assert fs2.extmgr.fragmentation(k) == 1
+    # and the re-striped volume allocates per stripe as usual
+    fs2.create("/new", shard=3)
+    fs2.write("/new", b"n" * BLOCK_SIZE * 5, 0)
+    assert fs2.file_shard("/new") == 3

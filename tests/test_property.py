@@ -221,3 +221,61 @@ def test_token_ring_bounds_and_fairness(n_tokens, n_nodes, rounds):
             assert len(ring.holders()) <= n_tokens  # never over-issued
     if rounds >= 3 * n_nodes:
         assert all(v > 0 for v in admitted.values())  # TTL reclaim → fairness
+
+
+# ------------------------------------------- re-striping across remounts
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_restripe_remount_accounting(seed):
+    """Alloc/free/remount cycles across CHANGED shard counts preserve
+    exact global and per-shard accounting (mirrored, with fixed seeds, in
+    tests/test_invariants_fallback.py): old-layout runs may straddle the
+    new stripe boundaries, and both carve (mount) and free (delete) must
+    split them per stripe."""
+    from repro.core.blockdev import BLOCK_SIZE
+
+    rng = random.Random(seed)
+    shards_a, shards_b = rng.choice(
+        [(1, 4), (4, 2), (2, 8), (8, 1), (4, 4), (1, 8)]
+    )
+    dev = BlockDevice(1 << 13)
+    fs = OffloadFS(dev, node="i", shards=shards_a)
+    files = {}
+    for i in range(14):
+        p = f"/f{i}"
+        shard = rng.randrange(shards_a) if rng.random() < 0.7 else None
+        fs.create(p, shard=shard)
+        data = bytes([rng.randrange(1, 256)]) * (rng.randrange(1, 40) * BLOCK_SIZE)
+        fs.write(p, data, 0)
+        files[p] = data
+    for p in rng.sample(sorted(files), 4):
+        fs.delete(p)
+        del files[p]
+    fs.flush_metadata()
+    fs2 = OffloadFS.mount(dev, node="i", shards=shards_b)
+    assert fs2.shards == shards_b
+    for p, d in files.items():  # content survives re-striping
+        assert fs2.read(p) == d
+    for k in range(shards_b):
+        lo, hi = fs2.extmgr.stripe_range(k)
+        used_k = sum(
+            1
+            for p in files
+            for e in fs2.stat(p).extents
+            for b in range(e.block, e.block + e.nblocks)
+            if lo <= b < hi
+        )
+        assert fs2.extmgr.free_blocks_in(k) == (hi - lo) - used_k
+    for p in files:  # carried shard ids re-derived from the new layout
+        for e in fs2.stat(p).extents:
+            assert e.shard == fs2.extmgr.shard_of(e.block)
+    exts = fs2.extmgr.alloc(rng.randrange(1, 50),
+                            shard=rng.randrange(shards_b))
+    fs2.extmgr.free(exts)
+    for p in sorted(files):
+        fs2.delete(p)
+    assert fs2.extmgr.free_blocks == dev.num_blocks - fs2.extmgr.reserved
+    for k in range(shards_b):
+        lo, hi = fs2.extmgr.stripe_range(k)
+        assert fs2.extmgr.free_blocks_in(k) == hi - lo
+        assert fs2.extmgr.fragmentation(k) == 1
