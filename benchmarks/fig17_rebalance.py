@@ -16,7 +16,10 @@ load. Three measurements:
      attached — output steering plus the between-rounds cold-table drain
      keep placement aligned; the *static* scenario keeps PR 3's fixed
      placement. A mixed read/ingest steady-state phase is then traced and
-     its per-stripe traffic replayed through per-shard NVMe FIFOs.
+     its per-stripe traffic replayed through per-shard NVMe FIFOs, with
+     the rebalancer's migration copies charged through
+     ``Cluster.rebalance`` on the same FIFOs (rate-limited and
+     unthrottled variants — migrations are no longer free in the replay).
      Claims: every tenant's reads stay correct, every migrated file is
      byte-identical, the busiest FIFO's share drops, and steady-state
      throughput recovers ≥1.5× vs static placement.
@@ -31,8 +34,10 @@ load. Three measurements:
   C. Fleet-level recovery (DES): ``KVParams(shard_skew=2.5)`` concentrates
      8 initiators' placement on one storage target;
      ``rebalance_at=0.25`` migrates them back to uniform placement
-     mid-run (background copy I/O via ``Cluster.rebalance``). Claim:
-     whole-run throughput recovers ≥1.2× vs static skew.
+     mid-run (background copy I/O via ``Cluster.rebalance``). Claims:
+     whole-run throughput recovers ≥1.2× vs static skew, and the
+     migration-rate limiter (``rebalance_rate``) beats the unthrottled
+     copy burst — paced copies can't starve foreground I/O.
 
 Run ``--smoke`` for the CI-sized subset (fewer ops, claims unchanged).
 """
@@ -125,7 +130,11 @@ def workload(dbs, models, rng, n_ops, *, read_ratio=0.0):
 
 def run_scenario(*, rebalance: bool, n_ops: int):
     """Warmup phase (skewed), optional rebalancing, then the measured
-    steady-state phase. Returns (traffic, fs, dbs, models, rb)."""
+    steady-state phase. Returns (traffic, fs, dbs, models, rb,
+    steady_moves) — steady_moves is only the migrations the drain hook
+    performed DURING the measured phase (the setup spread() happens
+    before the traffic counters reset and must not be charged into the
+    steady-state replay)."""
     dev, fs, fabric, engines, off, dbs, traffic = build()
     models = [dict() for _ in range(N_TENANTS)]
     rng = random.Random(17)
@@ -162,28 +171,49 @@ def run_scenario(*, rebalance: bool, n_ops: int):
     # rebalancer changed
     for k in traffic:
         traffic[k] = [0, 0]
+    moves_start = len(rb.stats.moves) if rb else 0
     workload(dbs, models, rng, n_ops, read_ratio=0.7)
     for db in dbs:
         db.flush_all()
     fabric.drain()
     dev.tracer = None  # measurement over: the correctness sweep's gets
-    return traffic, fs, dbs, models, rb  # must not pollute the traffic
+    steady_moves = rb.stats.moves[moves_start:] if rb else []
+    return traffic, fs, dbs, models, rb, steady_moves  # ^ no pollution
 
 
-def replay_fifos(traffic: dict) -> float:
+MIGRATION_RATE = 1.0e9  # limiter: migration copy paced to 1 GB/s
+
+
+def replay_fifos(traffic: dict, moves=(), *, rate=None) -> float:
     """DES replay of the measured per-stripe I/O: each stripe's bytes
     drain through its own NVMe read/write FIFO pair, stripes concurrent —
-    the makespan is set by the busiest FIFO (what skew costs)."""
+    the makespan is set by the busiest FIFO (what skew costs). Returns the
+    FOREGROUND completion time.
+
+    ``moves`` charges the rebalancer's migration copies (``(src, dst,
+    blocks)`` from ``RebalanceStats.moves``) through ``Cluster.rebalance``
+    — the same FIFOs the foreground drains use, spawned concurrently (the
+    drain hook migrates between compaction rounds, i.e. during the
+    measured steady state). ``rate`` is the migration-rate limiter: None
+    replays each copy as one FIFO-saturating burst; a bytes/s value paces
+    it in chunks so foreground I/O interleaves."""
     sim = Sim()
     cl = Cluster(sim, TESTBED, n_initiators=1, n_storage=N_SHARDS)
+    fg_done = {}
 
     def drain(t, read_blocks, write_blocks):
         yield ("use", cl.nvme_r_t[t], read_blocks * BLOCK_SIZE)
         yield ("use", cl.nvme_w_t[t], write_blocks * BLOCK_SIZE)
+        fg_done[t] = sim.now
 
+    for src, dst, blocks in moves:
+        if blocks > 0:
+            sim.spawn(cl.rebalance(0, blocks * BLOCK_SIZE,
+                                   src=src, dst=dst, rate=rate))
     for t, (rb_, wb_) in traffic.items():
         sim.spawn(drain(t, rb_, wb_))
-    return sim.run()
+    sim.run()
+    return max(fg_done.values(), default=0.0)
 
 
 def busiest_share(traffic: dict) -> float:
@@ -232,9 +262,9 @@ def main():
     n_ops = 3000 if smoke else 6000
 
     # ------------------------- A: steady-state throughput recovery
-    static_traffic, _, s_dbs, s_models, _ = run_scenario(
+    static_traffic, _, s_dbs, s_models, _, _ = run_scenario(
         rebalance=False, n_ops=n_ops)
-    dyn_traffic, dyn_fs, d_dbs, d_models, rb = run_scenario(
+    dyn_traffic, dyn_fs, d_dbs, d_models, rb, steady_moves = run_scenario(
         rebalance=True, n_ops=n_ops)
     for name, dbs, models in (("static", s_dbs, s_models),
                               ("dynamic", d_dbs, d_models)):
@@ -247,14 +277,34 @@ def main():
     check("fig17/skew_reduced", share_s >= 0.5 and share_d <= share_s - 0.15,
           f"busiest FIFO {share_s*100:.0f}% static vs {share_d*100:.0f}% "
           "rebalanced")
-    t_s, t_d = replay_fifos(static_traffic), replay_fifos(dyn_traffic)
+    # the dynamic replay CHARGES the rebalancer's migration copies that
+    # happened during the measured steady state (the drain hook's moves;
+    # the setup spread() predates the traffic reset) — once with the rate
+    # limiter, once unthrottled, so the limiter's effect on foreground
+    # completion is its own datapoint
+    moves = steady_moves
+    t_s = replay_fifos(static_traffic)
+    t_d = replay_fifos(dyn_traffic, moves, rate=MIGRATION_RATE)
+    t_d_unl = replay_fifos(dyn_traffic, moves)
     thr_s, thr_d = n_ops / t_s if t_s else 0.0, n_ops / t_d if t_d else 0.0
     recovery = thr_d / thr_s if thr_s else 0.0
     emit("fig17/steady_state_throughput",
          f"static={thr_s:.0f};rebalanced={thr_d:.0f}",
-         f"ops/s through the replayed FIFOs, recovery={recovery:.2f}x")
+         f"ops/s through the replayed FIFOs (migration I/O charged, "
+         f"limited to {MIGRATION_RATE / 1e9:.1f} GB/s), "
+         f"recovery={recovery:.2f}x")
     check("fig17/throughput_recovery", recovery >= 1.5,
-          f"{recovery:.2f}x steady-state throughput vs static placement")
+          f"{recovery:.2f}x steady-state throughput vs static placement "
+          "with migration copies charged")
+    mig_blocks = sum(b for _, _, b in moves)
+    emit("fig17/migration_replay",
+         f"limited={t_d:.6f};unlimited={t_d_unl:.6f}",
+         f"foreground completion (s), {mig_blocks} migrated blocks charged "
+         "(tenant files are tiny here; the fleet-scale limiter effect is "
+         "part C's with/without datapoint)")
+    check("fig17/migration_charged", mig_blocks > 0 and t_d_unl >= t_d,
+          f"replay charges {mig_blocks} blocks of copy traffic; "
+          "unthrottled is never faster for the foreground")
     emit("fig17/lease_journal",
          f"appends={dyn_fs.lease_journal.appends}",
          f"migrations={dyn_fs.migrations} blocks={dyn_fs.migrated_blocks}")
@@ -282,6 +332,19 @@ def main():
          f"recovery={des_rec:.2f}x (8 initiators, zipf placement)")
     check("fig17/des_recovery", des_rec >= 1.2,
           f"{des_rec:.2f}x whole-run DES throughput vs static skew")
+    # with/without migration-rate limiter: 8 initiators' 32 MB copies land
+    # at once when unthrottled and queue ahead of foreground I/O on the
+    # shared FIFOs; pacing them (Cluster.rebalance rate=1 GB/s) lets the
+    # foreground interleave between chunks
+    lim = run_kv(KVParams(**base, shard_skew=2.5, rebalance_at=0.25,
+                          rebalance_rate=MIGRATION_RATE), instances=8)
+    gain = lim.throughput / reb.throughput if reb.throughput else 0.0
+    emit("fig17/des_migration_limiter",
+         f"unlimited={reb.throughput:.0f};limited={lim.throughput:.0f}",
+         f"whole-run ops/s, limiter gain {gain:.3f}x")
+    check("fig17/des_limiter_no_starvation", lim.throughput > reb.throughput,
+          f"rate-limited migration recovers {gain:.3f}x the unthrottled "
+          "fleet throughput (copy bursts can't starve foreground I/O)")
 
 
 if __name__ == "__main__":

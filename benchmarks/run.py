@@ -33,6 +33,7 @@ MODULES = [
     "benchmarks.fig15_async_wal",
     "benchmarks.fig16_striped_extents",
     "benchmarks.fig17_rebalance",
+    "benchmarks.fig18_prep_pipeline",
     "benchmarks.roofline_report",
 ]
 
@@ -42,6 +43,7 @@ SMOKE_MODULES = [
     "benchmarks.fig15_async_wal",
     "benchmarks.fig16_striped_extents",
     "benchmarks.fig17_rebalance",
+    "benchmarks.fig18_prep_pipeline",
     "benchmarks.roofline_report",
 ]
 

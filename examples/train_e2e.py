@@ -1,15 +1,22 @@
 """End-to-end driver: train the ~100M-param `paper-lm-100m` for a few
 hundred steps on CPU with the FULL I/O plane engaged:
 
-  * deterministic resumable TokenPipeline feeds batches;
+  * deterministic resumable TokenPipeline feeds batches — or, with
+    ``--ingest prep``, the streaming PrepPipeline: minibatch preprocessing
+    fans out to the storage targets through the offload plane, assembled
+    batches stream through the bounded staging queue, and a deterministic
+    patch tokenizer chains the prep output into the LM's token plane;
   * every --ckpt-every steps the train state checkpoints into OffloadDB on
     a disaggregated volume (incremental/delta; flush+compaction offloaded
     to the storage node via OffloadFS — the paper's technique as the
-    trainer's fault-tolerance substrate);
+    trainer's fault-tolerance substrate); the ingestion iterator state
+    (epoch, cursor, in-flight share manifest) rides in the same checkpoint;
   * at --kill-at the process simulates a crash (drops ALL python state),
-    re-mounts the volume, restores, and finishes — verifying exact resume.
+    re-mounts the volume, restores, and finishes — verifying exact resume,
+    including the byte-identical ingestion cursor.
 
     PYTHONPATH=src python examples/train_e2e.py --steps 200
+    PYTHONPATH=src python examples/train_e2e.py --steps 60 --small --ingest prep
 """
 import argparse
 import sys
@@ -25,6 +32,8 @@ from repro.core.engine import OffloadEngine
 from repro.core.lsm import DBConfig, OffloadDB
 from repro.core.lsm import compaction as C
 from repro.core.offloader import TaskOffloader, serve_engine
+from repro.data.ingest import IngestState, PrepPipeline, tokens_from_batch
+from repro.data.offload_prep import OffloadPrep, stub_preprocess
 from repro.data.pipeline import PipelineState, TokenPipeline
 from repro.models.config import get_config
 from repro.models.model import build_model
@@ -40,9 +49,61 @@ def build_io_plane(dev):
     engine = OffloadEngine(fs, node="storage0", cache_blocks=8192)
     engine.register_stub("compact", C.stub_compact)
     engine.register_stub("log_recycle", C.stub_log_recycle)
+    engine.register_stub("preprocess", stub_preprocess)
     serve_engine(engine, fabric, AcceptAll())
     off = TaskOffloader(fs, fabric, node="trainer0")
     return fs, engine, off, fabric
+
+
+class PrepIngest:
+    """The prep→train chain: PrepPipeline minibatches → patch tokens.
+    Mirrors TokenPipeline's interface (next_batch / state) so the trainer
+    loop is ingestion-agnostic."""
+
+    N_IMAGES = 96
+    OUT_SIZE = 32
+
+    def __init__(self, fs, off, cfg, batch, seq, steps, *,
+                 state: IngestState = None):
+        if batch > self.N_IMAGES:
+            raise ValueError(
+                f"--batch {batch} exceeds the ingest corpus "
+                f"({self.N_IMAGES} images)")
+        self.vocab, self.seq = cfg.vocab_size, seq
+        self.prep = OffloadPrep(fs, off, out_size=self.OUT_SIZE,
+                                offload_ratio=1 / 3)
+        prefix = "/ingest_corpus"
+        if fs.exists(f"{prefix}/{0:08d}.raw"):  # re-mounted volume
+            self.paths = [p for p in fs.listdir(prefix + "/")]
+        else:
+            self.paths = self.prep.materialize_corpus(
+                self.N_IMAGES, prefix=prefix, max_side=128)
+        # enough WHOLE batches for every step: the pipeline drops the
+        # ragged tail, so epochs derive from floor(images/batch), not the
+        # image count
+        batches_per_epoch = self.N_IMAGES // batch
+        epochs = -(-steps // batches_per_epoch) + 1
+        if state is not None:
+            # the resumed run may need MORE epochs than the checkpoint
+            # recorded (e.g. --steps grew); batch must match the
+            # checkpoint and is validated by the pipeline
+            state.epochs = max(state.epochs, epochs)
+            self.pipe = PrepPipeline(self.prep, sorted(self.paths),
+                                     batch=batch, state=state)
+        else:
+            self.pipe = PrepPipeline(self.prep, sorted(self.paths),
+                                     batch=batch, epochs=epochs, seed=17)
+        self._it = iter(self.pipe)
+
+    @property
+    def state(self):
+        return self.pipe.state
+
+    def next_batch(self):
+        return tokens_from_batch(next(self._it), self.vocab, self.seq)
+
+    def close(self):
+        self.pipe.close()
 
 
 def main():
@@ -55,6 +116,10 @@ def main():
     ap.add_argument("--arch", default="paper-lm-100m")
     ap.add_argument("--small", action="store_true",
                     help="shrink the model for very fast demo runs")
+    ap.add_argument("--ingest", choices=("tokens", "prep"), default="tokens",
+                    help="tokens: synthetic TokenPipeline; prep: streaming "
+                         "PrepPipeline (offloaded preprocessing chained "
+                         "into the token plane)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -71,7 +136,10 @@ def main():
 
     opt = optim.adamw(lr=3e-4, schedule=optim.cosine_schedule(20, args.steps))
     state = init_state(model, opt, jax.random.key(0))
-    pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq)
+    if args.ingest == "prep":
+        pipe = PrepIngest(fs, off, cfg, args.batch, args.seq, args.steps)
+    else:
+        pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq)
     step_fn = jax.jit(make_train_step(model, opt))
 
     def run_until(state, pipe, stop):
@@ -94,6 +162,8 @@ def main():
     if args.kill_at < args.steps:
         print(f"\n*** simulated crash at step {args.kill_at}: dropping all "
               "host state; re-mounting the volume ***\n")
+        if args.ingest == "prep":
+            pipe.close()  # the dead trainer's producer thread dies with it
         del state, pipe, db, mgr, fs, off, engine
         fs, engine, off, fabric = build_io_plane(dev)
         db = OffloadDB.recover(fs, off)
@@ -106,8 +176,16 @@ def main():
         assert blob is not None
         restored = mgr.restore(like, latest)
         state = restored["train"]
-        pipe = TokenPipeline(cfg.vocab_size, args.batch, args.seq,
-                             state=PipelineState.from_json(str(restored["pipe"])))
+        if args.ingest == "prep":
+            ing = IngestState.from_json(str(restored["pipe"]))
+            ing.inflight = []  # abandoned by the crash; re-issued from cursor
+            pipe = PrepIngest(fs, off, cfg, args.batch, args.seq, args.steps,
+                              state=ing)
+            print(f"ingest resumed at epoch {ing.epoch} cursor {ing.cursor}")
+        else:
+            pipe = TokenPipeline(
+                cfg.vocab_size, args.batch, args.seq,
+                state=PipelineState.from_json(str(restored["pipe"])))
         print(f"restored at step {int(state['step'])}; resuming")
         state = run_until(state, pipe, args.steps)
 

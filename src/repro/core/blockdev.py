@@ -8,6 +8,7 @@ performance layer; the functional layer is deterministic and thread-safe.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional
 
@@ -23,11 +24,19 @@ class TraceEvent:
 
 
 class BlockDevice:
-    """A logical volume of `num_blocks` blocks of BLOCK_SIZE bytes."""
+    """A logical volume of `num_blocks` blocks of BLOCK_SIZE bytes.
 
-    def __init__(self, num_blocks: int, name: str = "vol0"):
+    ``read_latency_s`` models the NVMe-oF fetch round trip: each
+    ``read_blocks`` call sleeps that long OUTSIDE the lock (GIL released,
+    concurrent readers overlap — exactly the latency an ingestion pipeline
+    exists to hide). Default 0.0 keeps the functional layer instantaneous;
+    wall-clock benchmarks opt in."""
+
+    def __init__(self, num_blocks: int, name: str = "vol0", *,
+                 read_latency_s: float = 0.0):
         self.name = name
         self.num_blocks = num_blocks
+        self.read_latency_s = read_latency_s
         self._blocks: Dict[int, bytes] = {}
         self._lock = threading.Lock()
         self.tracer: Optional[Callable[[TraceEvent], None]] = None
@@ -41,6 +50,8 @@ class BlockDevice:
 
     def read_blocks(self, block: int, n: int, *, node: str = "?") -> bytes:
         self._check(block, n)
+        if self.read_latency_s > 0.0:
+            time.sleep(self.read_latency_s)
         with self._lock:
             out = b"".join(
                 self._blocks.get(b, b"\x00" * BLOCK_SIZE)

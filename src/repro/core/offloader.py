@@ -29,7 +29,12 @@ and three submission shapes:
     and fallback-to-local executed at resolution
   * ``submit_many``  — a batch of tasks load-balanced across targets, ONE
     wire message per target (``RpcFabric.call_batch``), executed
-    concurrently across targets
+    concurrently across targets; ``stream=True`` returns one
+    ``OffloadFuture`` per spec instead of a barrier, so a consumer (the
+    PrepPipeline ingestion plane) can overlap per-share completions with
+    its own work. Streamed specs may set ``reroute=True``: an
+    admission-rejected share is retried once on the least-loaded *other*
+    target before the local fallback runs.
 """
 from __future__ import annotations
 
@@ -53,6 +58,7 @@ class OffloadStats:
     offloaded: int = 0
     rejected: int = 0
     ran_local: int = 0
+    rerouted: int = 0  # admission pushback retried on another target
     batches: int = 0  # submit_many wire batches sent
     affinity_routed: int = 0  # tasks routed to the shard owning their extents
     by_target: Dict[str, int] = field(default_factory=dict)
@@ -161,6 +167,16 @@ class TaskOffloader:
         return min(rotation,
                    key=lambda t: (self._reject_streak[t], self._outstanding[t]))
 
+    def least_loaded_other(self, exclude: str) -> Optional[str]:
+        """The least-outstanding target that is NOT ``exclude`` (the
+        reroute destination after admission pushback); None when there is
+        nowhere else to go."""
+        with self._lock:
+            cands = [t for t in self.targets if t != exclude]
+            if not cands:
+                return None
+            return min(cands, key=lambda t: (self._outstanding.get(t, 0), t))
+
     def target_for_shard(self, shard: int) -> str:
         """The target owning extent-allocator stripe ``shard``: engines are
         registered in stripe order, so the mapping is positional."""
@@ -208,7 +224,11 @@ class TaskOffloader:
             self._sample_telemetry_locked()
 
     def _end(self, dst: str, outcome: str, blocks: int = 0) -> None:
-        """outcome ∈ {offloaded, rejected, error}."""
+        """outcome ∈ {offloaded, rejected, rerouted, error}. ``rerouted``
+        is admission pushback whose task is being retried on ANOTHER
+        target: the pushback is charged to ``dst`` (streak + per-target
+        count) but the task is neither rejected-to-local nor offloaded yet
+        — the retry's own ``_end`` settles it."""
         with self._lock:
             self._outstanding[dst] = max(0, self._outstanding.get(dst, 1) - 1)
             self._outstanding_blocks[dst] = max(
@@ -221,9 +241,12 @@ class TaskOffloader:
                 self.stats.offloaded += 1
                 self.stats.by_target[dst] = self.stats.by_target.get(dst, 0) + 1
                 self._reject_streak[dst] = 0
-            elif outcome == "rejected":
-                self.stats.rejected += 1
-                self.stats.ran_local += 1
+            elif outcome in ("rejected", "rerouted"):
+                if outcome == "rejected":
+                    self.stats.rejected += 1
+                    self.stats.ran_local += 1
+                else:
+                    self.stats.rerouted += 1
                 self.stats.rejected_by_target[dst] = (
                     self.stats.rejected_by_target.get(dst, 0) + 1
                 )
@@ -353,16 +376,30 @@ class TaskOffloader:
         wire_fut.add_done_callback(_done)
         return ofut
 
-    def submit_many(self, specs: Sequence[dict]) -> List[Any]:
+    def submit_many(self, specs: Sequence[dict], *,
+                    stream: bool = False) -> List[Any]:
         """Load-balanced batch submission: each spec is a dict with keys
         ``task``, ``args`` (tuple), plus optional ``kwargs``,
         ``read_extents``, ``write_extents``, ``target``, ``mtime``,
-        ``bypass_cache``. One wire message per distinct target
-        (``call_batch``), targets served concurrently; rejected sub-tasks
-        fall back to local execution. Returns [(result, where)] in input
-        order. If any wire batch fails the whole call raises after all
-        leases are released — results of sub-tasks that did complete are
-        discarded, so callers must treat the batch as all-or-nothing."""
+        ``bypass_cache``, ``reroute`` (stream only). One wire message per
+        distinct target (``call_batch``), targets served concurrently;
+        rejected sub-tasks fall back to local execution. Returns
+        [(result, where)] in input order. If any wire batch fails the
+        whole call raises after all leases are released — results of
+        sub-tasks that did complete are discarded, so callers must treat
+        the batch as all-or-nothing.
+
+        ``stream=True`` is the streaming-completion plane: the same
+        per-target wire batching, but the call returns immediately with
+        one ``OffloadFuture`` per spec (resolving to ``(result, where)``)
+        instead of a barrier — shares on a fast target resolve while a
+        slow target still computes. Leases are released per share at
+        resolution; a wire failure resolves only that target's futures
+        (with the exception), not the whole batch. A streamed spec with
+        ``reroute=True`` retries admission pushback once on the
+        least-loaded other target before falling back local."""
+        if stream:
+            return self._submit_many_stream(specs)
         if not specs:
             return []
         if not self.coalesce:  # legacy plane: one handshake per task, serial
@@ -446,6 +483,139 @@ class TaskOffloader:
             finally:
                 self.fs.release_lease(lease)
         return out
+
+    # ------------------------------------------------- streaming submission
+    def _fallback_local(self, spec: dict, lease: Lease,
+                        ofut: OffloadFuture) -> None:
+        """Run the rejected share on the initiator and resolve its future
+        (the lease is released either way)."""
+        try:
+            result = self._run_local(
+                spec["task"], lease, tuple(spec.get("args", ())),
+                dict(spec.get("kwargs", {})), spec.get("mtime", 0.0),
+            )
+        except BaseException as e:  # noqa: BLE001 - propagated via future
+            self.fs.release_lease(lease)
+            ofut.set_exception(e)
+            return
+        self.fs.release_lease(lease)
+        ofut.set_result((result, self.node))
+
+    def _reroute(self, spec: dict, lease: Lease, nb: int, rejected_by: str,
+                 ofut: OffloadFuture) -> None:
+        """Admission pushback retry: ONE attempt on the least-loaded other
+        target (still under the original lease), then the local fallback."""
+        alt = self.least_loaded_other(rejected_by)
+        if alt is None:
+            self._end(rejected_by, "rejected", nb)
+            self._fallback_local(spec, lease, ofut)
+            return
+        self._end(rejected_by, "rerouted", nb)
+        self._begin(alt, nb)
+        fut = self.fabric.call_async(
+            self.node, alt, "submit_task", self.node, spec["task"],
+            self._wire(lease), tuple(spec.get("args", ())),
+            dict(spec.get("kwargs", {})), spec.get("mtime", 0.0),
+            spec.get("bypass_cache", False),
+        )
+
+        def _done(f: RpcFuture):
+            exc = f.exception()
+            if exc is not None:
+                self._end(alt, "error", nb)
+                # the share still completes on the initiator; unlike the
+                # rejected path, "error" doesn't count ran_local itself
+                with self._lock:
+                    self.stats.ran_local += 1
+                self._fallback_local(spec, lease, ofut)
+                return
+            status, result = f.result()
+            if status == "ok":
+                self._end(alt, "offloaded", nb)
+                self.fs.release_lease(lease)
+                ofut.set_result((result, alt))
+                return
+            self._end(alt, "rejected", nb)
+            self._fallback_local(spec, lease, ofut)
+
+        fut.add_done_callback(_done)
+
+    def _submit_many_stream(self, specs: Sequence[dict]) -> List[OffloadFuture]:
+        """submit_many's streaming plane — see its docstring. On the
+        legacy (``coalesce=False``) plane each spec runs through the
+        3-message ``submit`` serially and its future resolves immediately
+        (the Fig. 14 baseline has no async form)."""
+        futs = [OffloadFuture() for _ in specs]
+        if not specs:
+            return futs
+        if not self.coalesce:
+            for s, ofut in zip(specs, futs):
+                try:
+                    ofut.set_result(self.submit(
+                        s["task"], *tuple(s.get("args", ())),
+                        read_extents=s.get("read_extents", ()),
+                        write_extents=s.get("write_extents", ()),
+                        target=s.get("target"), mtime=s.get("mtime", 0.0),
+                        bypass_cache=s.get("bypass_cache", False),
+                        coalesce=False, **dict(s.get("kwargs", {})),
+                    ))
+                except BaseException as e:  # noqa: BLE001
+                    ofut.set_exception(e)
+            return futs
+        plan = []  # (idx, spec, dst, lease)
+        try:
+            for idx, s in enumerate(specs):
+                dst = s.get("target") or self._route(
+                    s.get("read_extents", ()), s.get("write_extents", ())
+                )
+                lease = self.fs.grant_lease(
+                    s.get("read_extents", ()), s.get("write_extents", ())
+                )
+                self._begin(dst, self._lease_blocks(lease))
+                plan.append((idx, s, dst, lease))
+        except BaseException:
+            for _, _, d, lease in plan:
+                self._end(d, "error", self._lease_blocks(lease))
+                self.fs.release_lease(lease)
+            raise
+        groups: Dict[str, List[tuple]] = {}
+        for entry in plan:
+            groups.setdefault(entry[2], []).append(entry)
+        for dst, entries in groups.items():
+            fut = self.fabric.call_batch_async(self.node, dst, [
+                ("submit_task",
+                 (self.node, s["task"], self._wire(lease),
+                  tuple(s.get("args", ())), dict(s.get("kwargs", {})),
+                  s.get("mtime", 0.0), s.get("bypass_cache", False)),
+                 {})
+                for (_, s, _, lease) in entries
+            ])
+            with self._lock:
+                self.stats.batches += 1
+
+            def _landed(f: RpcFuture, dst=dst, entries=entries):
+                exc = f.exception()
+                if exc is not None:
+                    for (idx, _, _, lease) in entries:
+                        self._end(dst, "error", self._lease_blocks(lease))
+                        self.fs.release_lease(lease)
+                        futs[idx].set_exception(exc)
+                    return
+                for (idx, s, _, lease), (status, result) in zip(
+                        entries, f.result()):
+                    nb = self._lease_blocks(lease)
+                    if status == "ok":
+                        self._end(dst, "offloaded", nb)
+                        self.fs.release_lease(lease)
+                        futs[idx].set_result((result, dst))
+                    elif s.get("reroute"):
+                        self._reroute(s, lease, nb, dst, futs[idx])
+                    else:
+                        self._end(dst, "rejected", nb)
+                        self._fallback_local(s, lease, futs[idx])
+
+            fut.add_done_callback(_landed)
+        return futs
 
 
 def serve_engine(engine: OffloadEngine, fabric: RpcFabric, policy,

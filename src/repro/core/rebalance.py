@@ -59,8 +59,12 @@ class RebalanceStats:
     migrations: int = 0
     blocks_moved: int = 0
     skipped_leased: int = 0
+    deferred_budget: int = 0  # candidates deferred by the per-round budget
     steered: int = 0  # output allocations steered off an overloaded stripe
     by_dst: Dict[int, int] = field(default_factory=dict)
+    # every completed move as (src, dst, blocks) — the DES replay charges
+    # this exact copy traffic through the per-stripe FIFOs (fig17)
+    moves: List[Tuple[int, int, int]] = field(default_factory=list)
 
 
 class StripeRebalancer:
@@ -72,16 +76,27 @@ class StripeRebalancer:
     ``free_headroom`` — fraction of the destination stripe that must stay
     free after a migration (don't fill the cold stripe to the brim: its
     own tenants still allocate there).
+    ``migration_budget_blocks`` — the migration-rate limiter: at most this
+    many blocks copied per round (``rebalance()`` or ``spread()`` call).
+    The copy traffic shares the NVMe FIFOs with foreground I/O, so an
+    unbounded round can starve the very workload it is trying to help;
+    the budget spreads a large backlog over several rounds (candidates
+    over budget are counted ``deferred_budget`` and retried next round).
+    None = unlimited (the PR 4 behavior).
     """
 
     def __init__(self, fs: OffloadFS, offloader: Optional[TaskOffloader] = None,
-                 *, skew_threshold: float = 1.5, free_headroom: float = 0.05):
+                 *, skew_threshold: float = 1.5, free_headroom: float = 0.05,
+                 migration_budget_blocks: Optional[int] = None):
         if skew_threshold < 1.0:
             raise ValueError("skew_threshold must be >= 1.0")
+        if migration_budget_blocks is not None and migration_budget_blocks < 1:
+            raise ValueError("migration_budget_blocks must be >= 1")
         self.fs = fs
         self.off = offloader
         self.skew_threshold = skew_threshold
         self.free_headroom = free_headroom
+        self.migration_budget_blocks = migration_budget_blocks
         self.stats = RebalanceStats()
         self._lock = threading.Lock()
 
@@ -189,14 +204,23 @@ class StripeRebalancer:
             for shard, nblocks in placement.values():
                 load[shard] += nblocks
             done: List[Migration] = []
+            budget = self.migration_budget_blocks
+            # every _one_move call re-scans the candidate list, so a
+            # per-round set keeps an over-budget file from being counted
+            # deferred once per completed migration
+            deferred: set = set()
             while len(done) < max_files:
-                m = self._one_move(allowed, pressure, load, placement)
+                m = self._one_move(allowed, pressure, load, placement,
+                                   budget=budget, deferred=deferred)
                 if m is None:
                     break
                 done.append(m)
-                self.stats.migrations += 1
-                self.stats.blocks_moved += m.blocks
-                self.stats.by_dst[m.dst] = self.stats.by_dst.get(m.dst, 0) + 1
+                self._record(m)
+                if budget is not None:
+                    budget -= m.blocks
+                    if budget <= 0:
+                        break
+            self.stats.deferred_budget += len(deferred)
             return done
 
     def spread(self, paths: Iterable[str], *,
@@ -217,9 +241,13 @@ class StripeRebalancer:
                 ((placement[p][1], p) for p in paths if p in placement),
                 key=lambda t: (-t[0], t[1]),
             )
+            budget = self.migration_budget_blocks
             for nblocks, path in cands:
                 if len(done) >= max_files:
                     break
+                if budget is not None and nblocks > budget:
+                    self.stats.deferred_budget += 1
+                    continue  # over this round's copy budget: retry later
                 src = placement[path][0]
                 dst = min(load, key=lambda k: (load[k], k))
                 if dst == src:
@@ -238,14 +266,24 @@ class StripeRebalancer:
                 load[dst] += nblocks
                 m = Migration(path, src, dst, res["blocks"])
                 done.append(m)
-                self.stats.migrations += 1
-                self.stats.blocks_moved += m.blocks
-                self.stats.by_dst[dst] = self.stats.by_dst.get(dst, 0) + 1
+                self._record(m)
+                if budget is not None:
+                    budget -= m.blocks
+                    # budget 0 → every remaining candidate trips the
+                    # nblocks > budget check above and is counted deferred
             return done
+
+    def _record(self, m: Migration) -> None:
+        self.stats.migrations += 1
+        self.stats.blocks_moved += m.blocks
+        self.stats.by_dst[m.dst] = self.stats.by_dst.get(m.dst, 0) + 1
+        self.stats.moves.append((m.src, m.dst, m.blocks))
 
     def _one_move(self, allowed, pressure: Dict[int, float],
                   load: Dict[int, int],
-                  placement: Dict[str, Tuple[int, int]]) -> Optional[Migration]:
+                  placement: Dict[str, Tuple[int, int]], *,
+                  budget: Optional[int] = None,
+                  deferred: Optional[set] = None) -> Optional[Migration]:
         hot = max(pressure, key=lambda k: (pressure[k], -k))  # ties → low id
         cold = min(pressure, key=lambda k: (pressure[k], k))
         gap = pressure[hot] - pressure[cold]
@@ -258,6 +296,10 @@ class StripeRebalancer:
         )
         headroom = int(self.free_headroom * self._stripe_blocks(cold))
         for nblocks, path in cands:
+            if budget is not None and nblocks > budget:
+                if deferred is not None:
+                    deferred.add(path)
+                continue  # over this round's copy budget: retry later
             # projected pressure carried by this file: its share of the
             # hot stripe's placed blocks
             moved = pressure[hot] * nblocks / load[hot]

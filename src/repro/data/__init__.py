@@ -5,3 +5,4 @@ from repro.data.preprocess import (  # noqa: F401
 )
 from repro.data.offload_prep import OffloadPrep  # noqa: F401
 from repro.data.pipeline import TokenPipeline  # noqa: F401
+from repro.data.ingest import IngestState, PrepPipeline  # noqa: F401

@@ -39,7 +39,13 @@ class OffloadPrep:
         self._targets = list(targets) if targets is not None else None
         if offloader is not None:
             offloader.register_local_stub("preprocess", stub_preprocess)
-        self.stats = {"local": 0, "offloaded": 0, "rejected": 0}
+        # DISJOINT outcome counters — every image lands in exactly one, so
+        # sum(stats.values()) == images processed:
+        #   local     — planned for the initiator (never submitted)
+        #   offloaded — ran on its planned remote target
+        #   rerouted  — pushed back by the planned target, ran on another
+        #   rejected  — pushed back and fell back to the initiator
+        self.stats = {"local": 0, "offloaded": 0, "rejected": 0, "rerouted": 0}
 
     @property
     def targets(self) -> List[str]:
@@ -60,6 +66,14 @@ class OffloadPrep:
         return paths
 
     # ---------------------------------------------------------- minibatch
+    @staticmethod
+    def _image_seed(epoch_seed: int, i: int) -> int:
+        """Per-image augmentation seed, folded into RandomState's 32-bit
+        domain (large epoch seeds — e.g. the PrepPipeline's per-batch
+        seeds — must not overflow it). Values small callers pass are
+        unchanged by the mod."""
+        return (epoch_seed * 1000003 + i) % (2**31 - 1)
+
     def _image_arg(self, path: str, seed: int) -> Tuple[dict, list]:
         ino = self.fs.stat(path)
         return (
@@ -71,56 +85,77 @@ class OffloadPrep:
             ino.extents,
         )
 
+    def plan_shares(self, n: int) -> Tuple[List[Tuple[str, List[int]]],
+                                           List[int]]:
+        """Partition minibatch indices [0, n): ``offload_ratio × n`` images
+        per remote target, the rest local. Returns (remote_shares,
+        local_ids) where remote_shares is [(target, ids)]."""
+        per_target = int(n * self.offload_ratio)
+        remote: List[Tuple[str, List[int]]] = []
+        idx = 0
+        if self.off is not None and per_target > 0:
+            for t in self.targets:
+                ids = list(range(idx, min(idx + per_target, n)))
+                if ids:
+                    remote.append((t, ids))
+                idx += per_target
+        return remote, list(range(idx, n))
+
+    def share_spec(self, target: str, ids: Sequence[int],
+                   paths: Sequence[str], *, epoch_seed: int = 0,
+                   reroute: bool = False) -> dict:
+        """A ``TaskOffloader.submit_many`` spec for one remote share."""
+        args, extents = [], []
+        for i in ids:
+            a, e = self._image_arg(paths[i], self._image_seed(epoch_seed, i))
+            args.append(a)
+            extents.extend(e)
+        return {
+            "task": "preprocess", "args": (args, self.out_size),
+            "read_extents": extents, "write_extents": [],
+            "target": target, "reroute": reroute,
+            "mtime": max(self.fs.stat(paths[i]).mtime for i in ids),
+        }
+
+    def local_images(self, paths: Sequence[str], ids: Sequence[int], *,
+                     epoch_seed: int = 0) -> List[np.ndarray]:
+        """Preprocess the local share on the initiator (counted ``local``)."""
+        out = [
+            preprocess_image(self.fs.read(paths[i]),
+                             self._image_seed(epoch_seed, i), self.out_size)
+            for i in ids
+        ]
+        self.stats["local"] += len(ids)
+        return out
+
+    def note_remote_outcome(self, n: int, planned: str, ran: str) -> None:
+        """Fold a remote share's resolution into the disjoint counters."""
+        if self.off is not None and ran == self.off.node:
+            self.stats["rejected"] += n
+        elif ran != planned:
+            self.stats["rerouted"] += n
+        else:
+            self.stats["offloaded"] += n
+
     def preprocess_minibatch(self, paths: Sequence[str], *, epoch_seed: int = 0
                              ) -> np.ndarray:
         """Split the minibatch: offload_ratio × len(paths) images per remote
         target, the rest locally. Returns (N, out, out, 3) f32."""
         n = len(paths)
-        per_target = int(n * self.offload_ratio)
-        shares: List[Tuple[Optional[str], List[int]]] = []
-        idx = 0
-        if self.off is not None and per_target > 0:
-            for t in self.targets:
-                shares.append((t, list(range(idx, min(idx + per_target, n)))))
-                idx += per_target
-        shares.append((None, list(range(idx, n))))  # local share
-
+        remote, local_ids = self.plan_shares(n)
         out: List[Optional[np.ndarray]] = [None] * n
         # remote shares: one submit_many round — one wire batch per target,
         # targets served concurrently (instead of serial per-target calls)
-        specs, spec_ids = [], []
-        local_ids: List[int] = []
-        for target, ids in shares:
-            if not ids:
-                continue
-            if target is None:
-                local_ids = ids
-                continue
-            args, extents = [], []
-            for i in ids:
-                a, e = self._image_arg(paths[i], epoch_seed * 1000003 + i)
-                args.append(a)
-                extents.extend(e)
-            specs.append({
-                "task": "preprocess", "args": (args, self.out_size),
-                "read_extents": extents, "write_extents": [],
-                "target": target,
-                "mtime": max(self.fs.stat(paths[i]).mtime for i in ids),
-            })
-            spec_ids.append(ids)
+        specs = [self.share_spec(t, ids, paths, epoch_seed=epoch_seed)
+                 for t, ids in remote]
         if specs:
-            for ids, (tensors, where) in zip(spec_ids, self.off.submit_many(specs)):
-                if where == self.off.node:
-                    self.stats["rejected"] += len(ids)
-                    self.stats["local"] += len(ids)
-                else:
-                    self.stats["offloaded"] += len(ids)
+            for (target, ids), (tensors, where) in zip(
+                    remote, self.off.submit_many(specs)):
+                self.note_remote_outcome(len(ids), target, where)
                 for i, t in zip(ids, tensors):
                     out[i] = t
-        for i in local_ids:
-            buf = self.fs.read(paths[i])
-            out[i] = preprocess_image(
-                buf, epoch_seed * 1000003 + i, self.out_size
-            )
-        self.stats["local"] += len(local_ids)
+        for i, t in zip(local_ids,
+                        self.local_images(paths, local_ids,
+                                          epoch_seed=epoch_seed)):
+            out[i] = t
         return np.stack(out)  # type: ignore[arg-type]

@@ -53,6 +53,10 @@ class TestbedSpec:
     preprocess_rate: float = 25.0  # images/s/core
     kv_cpu_per_op: float = 12e-6  # initiator CPU per KV op (s)
     lease_replay_cpu: float = 2e-6  # per journaled lease record on re-mount
+    # trainer step consumption (accelerator, NOT the preprocessing cores):
+    # images/s one initiator's training step sinks — the consumer stage the
+    # PrepPipeline overlaps prep/transfer against
+    train_rate: float = 120.0
 
 
 TESTBED = TestbedSpec()
@@ -112,6 +116,12 @@ class Cluster:
         self.nvme_w = self.nvme_w_t[0]
         self.posvol = self.posvol_t[0]
         self.dlm = sim.resource("dlm", 1.0 / spec.dlm_rtt)  # msgs/s
+        # per-initiator trainer (accelerator): a 1-server FIFO — batches are
+        # consumed strictly in arrival order, one at a time
+        self.trainer_i: List[Resource] = [
+            sim.resource(f"trainer{i}", spec.train_rate)
+            for i in range(n_initiators)
+        ]
 
     # ------------------------------------------------------ primitive ops
     def net_transfer(self, initiator: int, nbytes: float, *, target: int = 0):
@@ -165,18 +175,37 @@ class Cluster:
         yield ("use", self.nvme_w_t[target], nbytes)
 
     def rebalance(self, initiator: int, nbytes: float, *,
-                  src: int = 0, dst: int = 0):
+                  src: int = 0, dst: int = 0,
+                  rate: Optional[float] = None, chunk_bytes: float = 4e6):
         """Online stripe migration (copy → swap → free, PR 4): the
         initiator drives the copy, so the moved bytes drain the SOURCE
         shard's NVMe read FIFO, cross the initiator's link twice (read
         back + write out) and land on the DESTINATION shard's write FIFO;
         one RPC covers the journaled lease grant + superblock commit.
-        Spawned as a background process — foreground ops never join it."""
+        Spawned as a background process — foreground ops never join it.
+
+        ``rate`` is the migration-rate limiter (bytes/s average): the copy
+        proceeds in ``chunk_bytes`` slices with pacing delays between
+        them, so the background traffic trickles through the FIFOs instead
+        of monopolizing them — foreground I/O interleaves between chunks
+        rather than queueing behind the whole copy. ``rate=None`` keeps
+        the unthrottled PR 4 behavior (one FIFO-saturating burst)."""
         yield from self.rpc(initiator, 4096, target=src)
-        yield ("use", self.nvme_r_t[src], nbytes)
-        yield from self.net_transfer(initiator, nbytes, target=src)
-        yield from self.net_transfer(initiator, nbytes, target=dst)
-        yield ("use", self.nvme_w_t[dst], nbytes)
+        remaining = nbytes
+        while remaining > 0:
+            c = min(chunk_bytes, remaining) if rate else remaining
+            yield ("use", self.nvme_r_t[src], c)
+            yield from self.net_transfer(initiator, c, target=src)
+            yield from self.net_transfer(initiator, c, target=dst)
+            yield ("use", self.nvme_w_t[dst], c)
+            remaining -= c
+            if rate and remaining > 0:
+                yield ("delay", c / rate)
+
+    def train_consume(self, initiator: int, n_images: float):
+        """The trainer sinks one prepped minibatch (strictly FIFO: the
+        1-server trainer resource serializes batches in arrival order)."""
+        yield ("use", self.trainer_i[initiator], n_images)
 
     def crash_remount(self, initiator: int, *, journal_records: int = 0,
                       meta_bytes: float = 256 * 1024, target: int = 0):

@@ -96,6 +96,10 @@ class KVParams:
     # migration I/O via Cluster.rebalance); 0.0 = static placement
     rebalance_at: float = 0.0
     rebalance_bytes: float = 32 * MB
+    # migration-rate limiter (bytes/s; None = unthrottled burst): paces the
+    # background copy through Cluster.rebalance so it can't starve the
+    # foreground FIFOs it shares
+    rebalance_rate: Optional[float] = None
 
 
 @dataclass
@@ -318,7 +322,8 @@ def run_kv(params: KVParams, *, instances: int = 1,
                 uniform = i % n_storage
                 if placement[i] != uniform:
                     sim.spawn(cl.rebalance(i, params.rebalance_bytes,
-                                           src=placement[i], dst=uniform))
+                                           src=placement[i], dst=uniform,
+                                           rate=params.rebalance_rate))
                     state["net_bytes"] += 2 * params.rebalance_bytes
                     placement[i] = uniform
             nw = round(n * params.write_ratio)

@@ -14,9 +14,19 @@ storage target ``i % n_storage`` (placement affinity), so its reads and
 offloaded preprocessing use that target's NVMe/CPU/links only — the
 AcceptAll collapse at 8 initiators (Fig. 9) is deferred as targets are
 added.
+
+``train=True`` adds the consumer: each prepped minibatch is sunk by the
+initiator's trainer (``Cluster.train_consume``, a 1-server FIFO).
+``pipelined=True`` is the PrepPipeline stage (Fig. 18): instead of
+prep → train strictly alternating, up to ``window + queue_depth``
+minibatches are in flight — remote shares execute on the targets and the
+local share on spare initiator cores *while* the trainer consumes earlier
+batches, so the epoch time collapses toward the bottleneck stage instead
+of the sum of stages.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 from typing import Optional
 
@@ -37,6 +47,13 @@ class PrepParams:
     target: str = "storage"  # storage | peer | both
     # striped plane: initiator i's corpus + offloads on target i % n_storage
     n_storage: int = 1
+    # ingestion plane (Fig. 18): charge the trainer consuming each prepped
+    # minibatch; `pipelined` overlaps prep/transfer/train with up to
+    # window + queue_depth minibatches in flight (the PrepPipeline stage)
+    train: bool = False
+    pipelined: bool = False
+    window: int = 2
+    queue_depth: int = 2
 
 
 @dataclass
@@ -114,42 +131,67 @@ def run_prep(params: PrepParams, *, instances: int = 1,
         state["net"] += nbytes + ret
         yield from cl.net_transfer(peer_id, 0.0, target=t)
 
+    def prep_minibatch(i, *, train: bool):
+        """Prep ONE minibatch: remote shares spawned, the local share on
+        the initiator's cores, join, then (optionally) the trainer sinks
+        it. One generator so the pipelined mode can run many in flight."""
+        mb = params.minibatch
+        n_off = int(mb * params.offload_ratio)
+        if n_off and params.target != "local" and sysname != "ext4":
+            admitted = policy.admit(f"init{i}")
+        else:
+            admitted = False
+        handles = []
+        n_local = mb - (n_off if admitted else 0)
+        if admitted and n_off:
+            state["offloaded"] += n_off
+            if params.target == "storage":
+                handles.append(("spawn", storage_images(i, n_off)))
+            elif params.target == "peer":
+                handles.append(("spawn", peer_images(i, n_off)))
+            else:  # both: split the offloaded share
+                handles.append(("spawn", storage_images(i, n_off // 2)))
+                handles.append(("spawn", peer_images(i, n_off - n_off // 2)))
+        elif n_off:
+            state["rejected"] += n_off
+        spawned = []
+        for s in handles:
+            h = yield s
+            spawned.append(h)
+        yield from local_images(i, n_local)
+        for h in spawned:
+            yield ("join", h)
+        if admitted:
+            policy.complete(f"init{i}")
+        if train:
+            yield from cl.train_consume(i, mb)
+
     def worker(i, n_minibatches):
+        """Synchronous ingestion: prep, then train, strictly alternating."""
         for _ in range(n_minibatches):
-            mb = params.minibatch
-            n_off = int(mb * params.offload_ratio)
-            if n_off and params.target != "local" and sysname != "ext4":
-                admitted = policy.admit(f"init{i}")
-            else:
-                admitted = False
-            handles = []
-            n_local = mb - (n_off if admitted else 0)
-            if admitted and n_off:
-                state["offloaded"] += n_off
-                if params.target == "storage":
-                    handles.append(("spawn", storage_images(i, n_off)))
-                elif params.target == "peer":
-                    handles.append(("spawn", peer_images(i, n_off)))
-                else:  # both: split the offloaded share
-                    handles.append(("spawn", storage_images(i, n_off // 2)))
-                    handles.append(("spawn", peer_images(i, n_off - n_off // 2)))
-            elif n_off:
-                state["rejected"] += n_off
-            spawned = []
-            for s in handles:
-                h = yield s
-                spawned.append(h)
-            yield from local_images(i, n_local)
-            for h in spawned:
-                yield ("join", h)
-            if admitted:
-                policy.complete(f"init{i}")
+            yield from prep_minibatch(i, train=params.train)
+
+    def pipelined_worker(i, n_minibatches):
+        """PrepPipeline ingestion: up to window + queue_depth minibatches
+        in flight (issued ahead of consumption); the oldest must clear the
+        trainer before the next is issued — the bounded staging queue's
+        backpressure."""
+        cap = max(1, params.window) + max(1, params.queue_depth)
+        inflight = deque()
+        for _ in range(n_minibatches):
+            if len(inflight) >= cap:
+                yield ("join", inflight.popleft())
+            h = yield ("spawn", prep_minibatch(i, train=params.train))
+            inflight.append(h)
+        while inflight:
+            yield ("join", inflight.popleft())
 
     per_thread = params.n_images // params.minibatch // params.threads
+    make_worker = pipelined_worker if params.pipelined else worker
     for i in range(instances):
         policy.register(f"init{i}")
         for _ in range(params.threads):
-            sim.spawn(worker(i, per_thread))
+            sim.spawn(make_worker(i, per_thread))
     makespan = sim.run()
     return PrepResult(
         epoch_time=makespan,

@@ -1,0 +1,301 @@
+"""PrepPipeline (streaming prep→train ingestion): determinism across
+target counts, checkpoint/resume through OffloadDB, admission-pushback
+re-routing, bounded-queue backpressure, and the streaming submit_many
+plane it rides on."""
+import time
+
+import numpy as np
+
+from repro.core import AcceptAll, BlockDevice, OffloadFS, RpcFabric
+from repro.core.admission import RejectAll
+from repro.core.engine import OffloadEngine
+from repro.core.lsm import DBConfig, OffloadDB
+from repro.core.lsm import compaction as C
+from repro.core.offloader import TaskOffloader, serve_engine
+from repro.data.ingest import IngestState, PrepPipeline, tokens_from_batch
+from repro.data.offload_prep import OffloadPrep, stub_preprocess
+
+
+def build_plane(n_targets=2, policies=None, *, mount=False, dev=None):
+    dev = dev or BlockDevice(num_blocks=1 << 17)
+    fs = OffloadFS.mount(dev, node="init0") if mount \
+        else OffloadFS(dev, node="init0")
+    fabric = RpcFabric()
+    engines = []
+    for t in range(n_targets):
+        eng = OffloadEngine(fs, node=f"storage{t}", cache_blocks=1024)
+        eng.register_stub("preprocess", stub_preprocess)
+        eng.register_stub("compact", C.stub_compact)
+        eng.register_stub("log_recycle", C.stub_log_recycle)
+        serve_engine(eng, fabric, policies[t] if policies else AcceptAll())
+        engines.append(eng)
+    off = TaskOffloader(fs, fabric, node="init0",
+                        targets=[e.node for e in engines])
+    return dev, fs, fabric, engines, off
+
+
+def make_prep(fs, off, ratio=0.25):
+    return OffloadPrep(fs, off, out_size=16, offload_ratio=ratio)
+
+
+# ------------------------------------------------------------ streaming
+def test_submit_many_stream_resolves_per_share():
+    dev, fs, fabric, engines, off = build_plane(2)
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(8, max_side=64)
+    remote, local_ids = prep.plan_shares(len(paths))
+    # ratio 0.25 × 8 images → 2 per target × 2 targets, 4 stay local
+    assert [(t, len(ids)) for t, ids in remote] == \
+        [("storage0", 2), ("storage1", 2)]
+    assert local_ids == [4, 5, 6, 7]
+    specs = [prep.share_spec(t, ids, paths, epoch_seed=1)
+             for t, ids in remote]
+    futs = off.submit_many(specs, stream=True)
+    assert len(futs) == len(specs)
+    for (target, ids), fut in zip(remote, futs):
+        tensors, where = fut.result(timeout=30)
+        assert where == target
+        assert len(tensors) == len(ids)
+    assert not fs._leases  # all released at resolution
+
+
+def test_submit_many_stream_empty_and_legacy_plane():
+    dev, fs, fabric, engines, off = build_plane(1)
+    assert off.submit_many([], stream=True) == []
+    # legacy (coalesce=False) plane still resolves futures
+    off2 = TaskOffloader(fs, fabric, node="init0", coalesce=False,
+                         targets=[engines[0].node])
+    prep = OffloadPrep(fs, off2, out_size=16, offload_ratio=0.5)
+    paths = prep.materialize_corpus(4, max_side=64)
+    remote, _ = prep.plan_shares(len(paths))
+    futs = off2.submit_many(
+        [prep.share_spec(t, ids, paths) for t, ids in remote], stream=True)
+    for fut in futs:
+        tensors, where = fut.result(timeout=30)
+        assert where == engines[0].node
+
+
+# ---------------------------------------------------------- determinism
+def _collect(pipe):
+    return [b.copy() for b in pipe]
+
+
+def test_batches_identical_regardless_of_target_count():
+    golden = None
+    for nt in (1, 3):
+        dev, fs, fabric, engines, off = build_plane(nt)
+        prep = OffloadPrep(fs, off, out_size=16, offload_ratio=0.2)
+        paths = prep.materialize_corpus(24, max_side=64)
+        got = _collect(PrepPipeline(prep, paths, batch=8, epochs=2, seed=7,
+                                    window=2, queue_depth=2))
+        assert len(got) == 6  # 3 batches/epoch × 2 epochs
+        if golden is None:
+            golden = got
+        else:
+            for a, b in zip(golden, got):
+                assert np.array_equal(a, b)
+
+
+def test_pipeline_matches_synchronous_minibatch_content():
+    """A pipeline batch equals preprocess_minibatch on the same paths and
+    seed — where a share runs never changes its bytes."""
+    dev, fs, fabric, engines, off = build_plane(2)
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(8, max_side=64)
+    pipe = PrepPipeline(prep, paths, batch=8, epochs=1, seed=3,
+                        shuffle=False)
+    got = _collect(pipe)
+    assert len(got) == 1
+    sync = make_prep(fs, off).preprocess_minibatch(
+        paths, epoch_seed=pipe._batch_seed(0, 0))
+    assert np.array_equal(got[0], sync)
+
+
+# ------------------------------------------------------------- resume
+def test_checkpoint_resume_roundtrip_through_offloaddb():
+    dev, fs, fabric, engines, off = build_plane(2)
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(40, max_side=64)
+    db = OffloadDB(fs, off, DBConfig(memtable_bytes=1 << 16))
+    golden = _collect(PrepPipeline(make_prep(fs, off), paths, batch=8,
+                                   epochs=2, seed=11))
+
+    pipe = PrepPipeline(prep, paths, batch=8, epochs=2, seed=11)
+    got, it = [], iter(pipe)
+    for _ in range(6):  # past the first epoch boundary (5 batches/epoch)
+        got.append(next(it).copy())
+    pipe.checkpoint(db)
+    pipe.close()
+    db.flush_all()
+    fs.flush_metadata()
+    fabric.drain()
+
+    # crash: everything rebuilt from the device
+    del pipe, prep, db, fs, off, engines, fabric
+    dev, fs2, fabric2, engines2, off2 = build_plane(2, mount=True, dev=dev)
+    db2 = OffloadDB.recover(fs2, off2)
+    pipe2 = PrepPipeline.resume(make_prep(fs2, off2), paths, db2)
+    assert pipe2.state.epoch == 1 and pipe2.state.cursor == 1
+    got.extend(_collect(pipe2))
+    assert len(got) == len(golden)
+    for a, b in zip(got, golden):
+        assert np.array_equal(a, b)
+
+
+def test_resume_preserves_shuffle_identity():
+    """Regression: shuffle is part of the checkpointed identity — a
+    shuffle=False pipeline must not resume into a shuffled order."""
+    dev, fs, fabric, engines, off = build_plane(1)
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(16, max_side=64)
+    db = OffloadDB(fs, off, DBConfig(memtable_bytes=1 << 16))
+    golden = _collect(PrepPipeline(make_prep(fs, off), paths, batch=4,
+                                   epochs=1, seed=3, shuffle=False))
+    pipe = PrepPipeline(prep, paths, batch=4, epochs=1, seed=3,
+                        shuffle=False)
+    got = [next(iter(pipe)).copy()]
+    pipe.checkpoint(db)
+    pipe.close()
+    pipe2 = PrepPipeline.resume(make_prep(fs, off), paths, db)
+    assert pipe2.state.shuffle is False
+    got.extend(_collect(pipe2))
+    assert len(got) == len(golden)
+    for a, b in zip(got, golden):
+        assert np.array_equal(a, b)
+    # contradicting the checkpointed identity raises
+    state = PrepPipeline.load_state(db)
+    try:
+        PrepPipeline(make_prep(fs, off), paths, shuffle=True, state=state)
+        assert False, "shuffle mismatch must raise"
+    except ValueError:
+        pass
+
+
+def test_resume_requires_checkpoint_and_matching_corpus():
+    dev, fs, fabric, engines, off = build_plane(1)
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(8, max_side=64)
+    db = OffloadDB(fs, off, DBConfig(memtable_bytes=1 << 16))
+    try:
+        PrepPipeline.resume(prep, paths, db)
+        assert False, "resume without a checkpoint must raise"
+    except KeyError:
+        pass
+    state = IngestState(seed=1, batch=4, epochs=1, n_images=999)
+    try:
+        PrepPipeline(prep, paths, state=state)
+        assert False, "corpus size mismatch must raise"
+    except ValueError:
+        pass
+
+
+# ------------------------------------------------------------- reroute
+def test_rejected_share_reroutes_before_local_fallback():
+    dev, fs, fabric, engines, off = build_plane(
+        2, policies=[RejectAll(), AcceptAll()])
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(16, max_side=64)
+    got = _collect(PrepPipeline(prep, paths, batch=8, epochs=1, seed=5))
+    assert len(got) == 2
+    assert prep.stats["rerouted"] > 0
+    assert prep.stats["rejected"] == 0  # nothing fell back to the initiator
+    assert engines[0].tasks_run == 0 and engines[1].tasks_run > 0
+    assert sum(prep.stats.values()) == 16
+    assert off.stats.rerouted > 0
+
+
+def test_reroute_wire_error_falls_back_local_and_counts_ran_local():
+    """Regression: a reroute retry that dies on the wire (no handler on
+    the alt target) still completes the share locally AND counts it in
+    ran_local — the stats cover every completed task."""
+    dev, fs, fabric, engines, off = build_plane(1, policies=[RejectAll()])
+    off.add_target("ghost")  # registered target, no fabric endpoint
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(8, max_side=64)
+    remote, _ = prep.plan_shares(len(paths))
+    specs = [prep.share_spec("storage0", ids, paths, reroute=True)
+             for t, ids in remote]
+    for fut in off.submit_many(specs, stream=True):
+        tensors, where = fut.result(timeout=30)
+        assert where == off.node  # completed on the initiator
+    assert off.stats.rerouted == len(specs)
+    assert off.stats.ran_local == len(specs)
+    assert not fs._leases
+
+
+def test_all_targets_rejecting_falls_back_local():
+    dev, fs, fabric, engines, off = build_plane(
+        2, policies=[RejectAll(), RejectAll()])
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(8, max_side=64)
+    got = _collect(PrepPipeline(prep, paths, batch=8, epochs=1, seed=5))
+    assert len(got) == 1
+    # 2 images/target were submitted; both targets pushed back → initiator
+    assert prep.stats["rejected"] == 4 and prep.stats["local"] == 4
+    assert sum(prep.stats.values()) == 8
+    assert engines[0].tasks_run == engines[1].tasks_run == 0
+    assert not fs._leases
+
+
+def test_offload_prep_stats_are_disjoint():
+    """Satellite fix: a rejected share must not double-count as local —
+    the counters partition the images exactly."""
+    dev, fs, fabric, engines, off = build_plane(1, policies=[RejectAll()])
+    prep = OffloadPrep(fs, off, out_size=16, offload_ratio=0.5)
+    paths = prep.materialize_corpus(12, max_side=64)
+    prep.preprocess_minibatch(paths, epoch_seed=3)
+    assert prep.stats["rejected"] == 6 and prep.stats["local"] == 6
+    assert sum(prep.stats.values()) == 12
+
+
+# -------------------------------------------------------- backpressure
+def test_bounded_queue_backpressure_blocks_never_drops():
+    dev, fs, fabric, engines, off = build_plane(2)
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(40, max_side=64)
+    pipe = PrepPipeline(prep, paths, batch=4, epochs=1, seed=9,
+                        window=1, queue_depth=1)
+    pipe.start()
+    deadline = time.time() + 30
+    while len(pipe._queue) < 1 and time.time() < deadline:
+        time.sleep(0.01)
+    time.sleep(0.3)  # producer gets every chance to overrun the bound
+    assert len(pipe._queue) == 1  # full and HOLDING (producer blocked)
+    assert pipe._queue.max_seen <= 1
+    # issued ≤ delivered + queue + window + the one being assembled
+    assert pipe.issued <= 0 + 1 + 1 + 1
+    got = _collect(pipe)  # drain: every batch arrives exactly once
+    assert len(got) == 10
+    assert pipe._queue.max_seen <= 1
+    golden = _collect(PrepPipeline(make_prep(fs, off), paths, batch=4,
+                                   epochs=1, seed=9, window=3,
+                                   queue_depth=4))
+    for a, b in zip(got, golden):
+        assert np.array_equal(a, b)
+
+
+def test_close_mid_epoch_releases_leases_and_stops_producer():
+    dev, fs, fabric, engines, off = build_plane(2)
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(32, max_side=64)
+    pipe = PrepPipeline(prep, paths, batch=4, epochs=4, seed=2)
+    it = iter(pipe)
+    next(it)
+    pipe.close()
+    fabric.drain()
+    assert not fs._leases
+    assert pipe._thread is None
+    # the volume stays usable: a fresh pipeline runs to completion
+    assert len(_collect(PrepPipeline(make_prep(fs, off), paths, batch=4,
+                                     epochs=1, seed=2))) == 8
+
+
+# ----------------------------------------------------------- tokenizer
+def test_tokens_from_batch_deterministic_and_bounded():
+    batch = np.random.RandomState(0).rand(4, 16, 16, 3).astype(np.float32)
+    a = tokens_from_batch(batch, vocab=512, seq_len=32)
+    b = tokens_from_batch(batch.copy(), vocab=512, seq_len=32)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 32) and a["labels"].shape == (4, 32)
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 512
+    assert np.array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])

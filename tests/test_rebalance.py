@@ -239,6 +239,54 @@ def test_spread_rehomes_explicit_set():
         assert fs.read(p) == d
 
 
+def test_migration_budget_limits_copy_traffic_per_round():
+    """The migration-rate limiter: a round never copies more blocks than
+    its budget; deferred candidates are counted and picked up by later
+    rounds, and every move is logged for the DES replay to charge."""
+    dev, fs = make_fs()
+    for i in range(6):
+        fill(fs, f"/f{i}", 0, 6, 0x60 + i)
+    rb = StripeRebalancer(fs, migration_budget_blocks=8)
+    moved = rb.rebalance(max_files=16)
+    assert moved and sum(m.blocks for m in moved) <= 8
+    assert rb.stats.deferred_budget > 0
+    total_rounds = 1
+    while rb.skewed() and total_rounds < 10:
+        if not rb.rebalance(max_files=16, force=True):
+            break
+        total_rounds += 1
+    assert total_rounds > 1  # the backlog drained across several rounds
+    assert rb.stats.moves[:len(moved)] == [(m.src, m.dst, m.blocks)
+                                           for m in moved]
+    assert all(b > 0 for _, _, b in rb.stats.moves)
+    assert sum(b for _, _, b in rb.stats.moves) == rb.stats.blocks_moved
+
+
+def test_deferred_budget_counts_each_candidate_once_per_round():
+    """Regression: every _one_move call re-scans the candidates, so an
+    over-budget file must not be re-counted per completed migration."""
+    dev, fs = make_fs()
+    for i in range(4):
+        fill(fs, f"/s{i}", 0, 6, 0x80 + i)
+    for i in range(2):
+        fill(fs, f"/b{i}", 0, 10, 0x90 + i)
+    rb = StripeRebalancer(fs, migration_budget_blocks=8)
+    moved = rb.rebalance(max_files=16)
+    assert len(moved) == 1 and moved[0].blocks == 6
+    # exactly the 5 not-moved candidates deferred — once each
+    assert rb.stats.deferred_budget == 5
+
+
+def test_spread_respects_migration_budget():
+    dev, fs = make_fs()
+    for i in range(4):
+        fill(fs, f"/t0/{i}", 0, 5, 0x70 + i)
+    rb = StripeRebalancer(fs, migration_budget_blocks=10)
+    moved = rb.spread(fs.listdir("/t0/"))
+    assert sum(m.blocks for m in moved) <= 10
+    assert rb.stats.deferred_budget > 0
+
+
 def test_steer_routes_outputs_off_overloaded_stripe():
     dev, fs = make_fs()
     rb = StripeRebalancer(fs)

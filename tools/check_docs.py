@@ -10,7 +10,10 @@ Scans ``docs/*.md`` and ``README.md`` for:
     ``docs/ARCHITECTURE.md``, ...): the path must exist at the repo root;
   * dotted module references in backticks (``repro.sim.kvmodel``,
     ``benchmarks.run``): the module must resolve under ``src/`` or the
-    repo root.
+    repo root;
+  * benchmark coverage: every benchmark module in ``benchmarks/`` (except
+    the harness/helpers) must be documented in ``docs/BENCHMARKS.md`` —
+    an undocumented figure module fails the docs job.
 
 Exit code = number of broken references; each is printed as
 ``file:line: message``.
@@ -67,11 +70,31 @@ def check_file(md: Path) -> list:
     return errors
 
 
+BENCH_HELPERS = {"run.py", "common.py", "__init__.py"}
+
+
+def check_bench_coverage() -> list:
+    """Every benchmark module must have a docs/BENCHMARKS.md mention."""
+    doc = ROOT / "docs" / "BENCHMARKS.md"
+    if not doc.exists():
+        return ["docs/BENCHMARKS.md: missing (benchmark docs required)"]
+    text = doc.read_text(encoding="utf-8")
+    errors = []
+    for mod in sorted((ROOT / "benchmarks").glob("*.py")):
+        if mod.name in BENCH_HELPERS:
+            continue
+        if mod.name not in text:
+            errors.append(f"docs/BENCHMARKS.md: benchmarks/{mod.name} "
+                          "exists but is undocumented")
+    return errors
+
+
 def main() -> int:
     files = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
     errors = []
     for md in files:
         errors.extend(check_file(md))
+    errors.extend(check_bench_coverage())
     for e in errors:
         print(e)
     print(f"checked {len(files)} files, {len(errors)} broken references")
