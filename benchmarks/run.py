@@ -34,6 +34,7 @@ MODULES = [
     "benchmarks.fig16_striped_extents",
     "benchmarks.fig17_rebalance",
     "benchmarks.fig18_prep_pipeline",
+    "benchmarks.fig19_router_failover",
     "benchmarks.roofline_report",
 ]
 
@@ -44,6 +45,7 @@ SMOKE_MODULES = [
     "benchmarks.fig16_striped_extents",
     "benchmarks.fig17_rebalance",
     "benchmarks.fig18_prep_pipeline",
+    "benchmarks.fig19_router_failover",
     "benchmarks.roofline_report",
 ]
 

@@ -13,10 +13,16 @@ through a calibrated discrete-event simulator (benchmarks/).
 from repro.core.blockdev import BLOCK_SIZE, BlockDevice  # noqa: F401
 from repro.core.extents import Extent, ExtentManager  # noqa: F401
 from repro.core.fs import OffloadFS  # noqa: F401
-from repro.core.rpc import RpcFabric  # noqa: F401
+from repro.core.rpc import FaultyFabric, RpcFabric  # noqa: F401
 from repro.core.engine import OffloadEngine  # noqa: F401
 from repro.core.offloader import TaskOffloader  # noqa: F401
 from repro.core.rebalance import StripeRebalancer  # noqa: F401
+from repro.core.router import (  # noqa: F401
+    ClusterRouter,
+    OverloadShed,
+    RequestCancelled,
+    standby_takeover,
+)
 from repro.core.admission import (  # noqa: F401
     AcceptAll,
     CPUThreshold,

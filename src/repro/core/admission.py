@@ -27,6 +27,12 @@ class EwmaGauge:
     FIFO-pressure telemetry the stripe rebalancer consumes (a single deep
     burst must not trigger a migration storm, but sustained skew must).
     Not thread-safe on its own — callers update under their own lock.
+
+    **Aging** (the ClusterRouter's stale-telemetry defence): ``update``
+    optionally stamps the sample time, and ``aged_value`` decays the EWMA
+    toward 0 ("unknown") as the gauge goes unreported — a target that
+    stops answering health probes must decay out of routing preference,
+    never stay frozen at its last (possibly flattering) reading.
     """
 
     def __init__(self, alpha: float = 0.2, value: float = 0.0):
@@ -35,11 +41,31 @@ class EwmaGauge:
         self.alpha = alpha
         self.value = value
         self.samples = 0
+        self.updated_at: Optional[float] = None  # last stamped sample time
 
-    def update(self, sample: float) -> float:
+    def update(self, sample: float, now: Optional[float] = None) -> float:
         self.value += self.alpha * (sample - self.value)
         self.samples += 1
+        if now is not None:
+            self.updated_at = now
         return self.value
+
+    def age(self, now: float) -> float:
+        """Seconds since the last stamped sample (inf if never stamped)."""
+        if self.updated_at is None:
+            return float("inf")
+        return max(0.0, now - self.updated_at)
+
+    def aged_value(self, now: float, half_life: float) -> float:
+        """The EWMA decayed by its reporting age: halves every
+        ``half_life`` seconds of silence, so a silent target reads as
+        "unknown, approaching idle" rather than "exactly as last seen"."""
+        a = self.age(now)
+        if a == float("inf"):
+            return 0.0
+        if half_life <= 0.0 or a <= 0.0:
+            return self.value
+        return self.value * 0.5 ** (a / half_life)
 
 
 class AdmissionPolicy:

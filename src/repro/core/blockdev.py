@@ -7,6 +7,7 @@ performance layer; the functional layer is deterministic and thread-safe.
 """
 from __future__ import annotations
 
+import pickle
 import threading
 import time
 from dataclasses import dataclass
@@ -81,6 +82,32 @@ class BlockDevice:
         with self._lock:
             for b in range(block, block + n):
                 self._blocks.pop(b, None)
+
+    # ------------------------------------------------------- persistence
+    # The simulated volume normally lives and dies with the process; the
+    # cold-process failover tests need the OPPOSITE — the volume (the
+    # "disaggregated" part of the system) must survive an initiator crash
+    # so a standby can re-mount it. save/load pickle only the sparse block
+    # map, not counters or tracer: a real NVMeoF volume carries data, not
+    # the dead initiator's statistics.
+    def save(self, path: str) -> None:
+        with self._lock:
+            snap = dict(self._blocks)
+        with open(path, "wb") as f:
+            pickle.dump(
+                {"name": self.name, "num_blocks": self.num_blocks,
+                 "blocks": snap},
+                f,
+            )
+
+    @classmethod
+    def load(cls, path: str, *, read_latency_s: float = 0.0) -> "BlockDevice":
+        with open(path, "rb") as f:
+            state = pickle.load(f)
+        dev = cls(state["num_blocks"], state["name"],
+                  read_latency_s=read_latency_s)
+        dev._blocks = dict(state["blocks"])
+        return dev
 
     # ------------------------------------------------------------ stats
     @property

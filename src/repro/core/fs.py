@@ -838,9 +838,28 @@ class OffloadFS:
     # ---------------------------------------------- target-side block APIs
     # (called by the Offload Engine on behalf of an authorized task; the
     #  device is shared via NVMeoF so both nodes address the same blocks)
+    def _live_lease(self, lease: Lease) -> Lease:
+        """The REGISTERED lease for this task id — the fencing check. A
+        wire-reconstructed Lease is just a claim; authorization comes from
+        the initiator's live registry, so a task whose lease was released
+        (cancellation), reclaimed (``reclaim_orphans`` after failover), or
+        never granted is fenced here with ``LeaseViolation`` instead of
+        scribbling on re-owned blocks. This is the no-DLM story's other
+        half: leases don't only quiesce the initiator, they also fence the
+        *target* once revoked."""
+        with self._lock:
+            live = self._leases.get(lease.task_id)
+        if live is None or live.done:
+            raise LeaseViolation(
+                f"task {lease.task_id} lease is not registered "
+                "(released, cancelled, or fenced)"
+            )
+        return live
+
     def authorized_read(self, lease: Lease, block: int, nblocks: int,
                         *, node: str) -> bytes:
-        ok = lease.read_blocks | lease.write_blocks
+        live = self._live_lease(lease)
+        ok = live.read_blocks | live.write_blocks
         for b in range(block, block + nblocks):
             if b not in ok:
                 raise LeaseViolation(f"task {lease.task_id} read of unauthorized block {b}")
@@ -848,8 +867,9 @@ class OffloadFS:
 
     def authorized_write(self, lease: Lease, block: int, data: bytes,
                          *, node: str) -> None:
+        live = self._live_lease(lease)
         n = (len(data) + BLOCK_SIZE - 1) // BLOCK_SIZE
         for b in range(block, block + n):
-            if b not in lease.write_blocks:
+            if b not in live.write_blocks:
                 raise LeaseViolation(f"task {lease.task_id} write of unauthorized block {b}")
         self.dev.write_blocks(block, data, node=node)

@@ -118,6 +118,19 @@ class TaskOffloader:
                 self._outstanding_blocks[name] = 0
                 self._qblocks_ewma[name] = EwmaGauge()
 
+    def remove_target(self, name: str) -> bool:
+        """Drop ``name`` from the routing set (router ``leave``/quarantine).
+        In-flight submissions to it settle through their own ``_end`` —
+        ``_end``/``_begin`` tolerate unknown names — but no NEW share will
+        be routed there. Telemetry gauges are kept (cheap, and a rejoining
+        target should not restart from a cold EWMA). Returns whether the
+        name was actually routable."""
+        with self._lock:
+            if name not in self.targets:
+                return False
+            self.targets.remove(name)
+            return True
+
     def outstanding(self) -> Dict[str, int]:
         with self._lock:
             return dict(self._outstanding)
@@ -141,6 +154,8 @@ class TaskOffloader:
         ``target_for_shard``)."""
         depths = self.queue_blocks_ewma()
         n = len(self.targets)
+        if n == 0:
+            return {}
         return {
             k: depths.get(self.targets[k % n], 0.0)
             for k in range(max(1, self.fs.shards))
@@ -151,28 +166,45 @@ class TaskOffloader:
         with self._lock:
             return self._pick_locked()
 
+    def _eligible_locked(self) -> List[str]:
+        """Targets whose engine actually came up (has a ``submit_task``
+        endpoint). A name can be registered before its engine is wired —
+        routing to it would fail with a spurious ``KeyError``/``RpcError``,
+        so load balancing skips it. When NO target has an endpoint the full
+        list is returned so the wire error surfaces at call time instead of
+        an opaque pick-time failure (the legacy single-target behaviour)."""
+        live = [t for t in self.targets if self.fabric.has_endpoint(t)]
+        return live or list(self.targets)
+
     def _pick_locked(self) -> str:
-        n = len(self.targets)
+        if not self.targets:
+            raise LookupError("no offload targets registered")
+        cands = self._eligible_locked()
+        n = len(cands)
         if n == 1:
-            return self.targets[0]
+            return cands[0]
         start = self._rr % n
         self._rr += 1
         if self.lb_policy == "round_robin":
-            return self.targets[start]
-        rotation = [self.targets[(start + i) % n] for i in range(n)]
+            return cands[start]
+        rotation = [cands[(start + i) % n] for i in range(n)]
         if self.lb_policy in ("least_outstanding", "placement_affinity"):
             # placement_affinity lands here only for tasks without extents
-            return min(rotation, key=lambda t: self._outstanding[t])
+            return min(rotation, key=lambda t: self._outstanding.get(t, 0))
         # admission_aware: avoid targets pushing back, then least loaded
         return min(rotation,
-                   key=lambda t: (self._reject_streak[t], self._outstanding[t]))
+                   key=lambda t: (self._reject_streak.get(t, 0),
+                                  self._outstanding.get(t, 0)))
 
     def least_loaded_other(self, exclude: str) -> Optional[str]:
         """The least-outstanding target that is NOT ``exclude`` (the
-        reroute destination after admission pushback); None when there is
-        nowhere else to go."""
+        reroute destination after admission pushback or a wire failure);
+        None when there is nowhere else to go. Targets whose engine never
+        came up (no ``submit_task`` endpoint) are skipped — rerouting a
+        share to a stub-less name would just fail again."""
         with self._lock:
-            cands = [t for t in self.targets if t != exclude]
+            cands = [t for t in self.targets
+                     if t != exclude and self.fabric.has_endpoint(t)]
             if not cands:
                 return None
             return min(cands, key=lambda t: (self._outstanding.get(t, 0), t))
@@ -346,6 +378,10 @@ class TaskOffloader:
         nb = self._lease_blocks(lease)
         self._begin(dst, nb)
         ofut = OffloadFuture()
+        # the router's cancellation path needs the in-flight lease (to
+        # revoke it through the journal) and the destination (telemetry)
+        ofut.lease = lease
+        ofut.target = dst
         wire_fut: RpcFuture = self.fabric.call_async(
             self.node, dst, "submit_task", self.node, task,
             self._wire(lease), args, kwargs, mtime, bypass_cache,
@@ -540,6 +576,50 @@ class TaskOffloader:
 
         fut.add_done_callback(_done)
 
+    def _retry_elsewhere(self, spec: dict, lease: Lease, nb: int, failed: str,
+                         ofut: OffloadFuture) -> None:
+        """Wire-failure recovery for a streamed ``reroute=True`` share: the
+        target died (or partitioned) after admission, so retry ONCE on the
+        least-loaded other target — still under the ORIGINAL lease, which
+        is exactly why no DLM is needed: the write set stayed quiesced on
+        the initiator throughout, so re-running elsewhere is idempotent-
+        safe. The caller has already settled ``failed``'s accounting with
+        ``_end(failed, "error")``; here we only charge the retry leg."""
+        alt = self.least_loaded_other(failed)
+        if alt is None:
+            with self._lock:
+                self.stats.ran_local += 1
+            self._fallback_local(spec, lease, ofut)
+            return
+        with self._lock:
+            self.stats.rerouted += 1
+        self._begin(alt, nb)
+        fut = self.fabric.call_async(
+            self.node, alt, "submit_task", self.node, spec["task"],
+            self._wire(lease), tuple(spec.get("args", ())),
+            dict(spec.get("kwargs", {})), spec.get("mtime", 0.0),
+            spec.get("bypass_cache", False),
+        )
+
+        def _done(f: RpcFuture):
+            exc = f.exception()
+            if exc is not None:  # second target down too: land it ourselves
+                self._end(alt, "error", nb)
+                with self._lock:
+                    self.stats.ran_local += 1
+                self._fallback_local(spec, lease, ofut)
+                return
+            status, result = f.result()
+            if status == "ok":
+                self._end(alt, "offloaded", nb)
+                self.fs.release_lease(lease)
+                ofut.set_result((result, alt))
+                return
+            self._end(alt, "rejected", nb)
+            self._fallback_local(spec, lease, ofut)
+
+        fut.add_done_callback(_done)
+
     def _submit_many_stream(self, specs: Sequence[dict]) -> List[OffloadFuture]:
         """submit_many's streaming plane — see its docstring. On the
         legacy (``coalesce=False``) plane each spec runs through the
@@ -596,10 +676,19 @@ class TaskOffloader:
             def _landed(f: RpcFuture, dst=dst, entries=entries):
                 exc = f.exception()
                 if exc is not None:
-                    for (idx, _, _, lease) in entries:
-                        self._end(dst, "error", self._lease_blocks(lease))
-                        self.fs.release_lease(lease)
-                        futs[idx].set_exception(exc)
+                    # the target died (or partitioned) mid-batch: shares
+                    # that opted in (reroute=True) recover — retried on the
+                    # least-loaded other target or landed locally, still
+                    # under the original lease; the rest surface the error
+                    for (idx, s, _, lease) in entries:
+                        nb = self._lease_blocks(lease)
+                        self._end(dst, "error", nb)
+                        if s.get("reroute"):
+                            self._retry_elsewhere(s, lease, nb, dst,
+                                                  futs[idx])
+                        else:
+                            self.fs.release_lease(lease)
+                            futs[idx].set_exception(exc)
                     return
                 for (idx, s, _, lease), (status, result) in zip(
                         entries, f.result()):
@@ -680,11 +769,26 @@ def serve_engine(engine: OffloadEngine, fabric: RpcFabric, policy,
         engine.wal_segments += 1
         return len(payload)
 
+    def ping() -> dict:
+        """Health/telemetry probe (the ClusterRouter's heartbeat): the
+        engine's own queue counters, so the router can cross-check its
+        initiator-side EWMAs against target-side truth. A dead or
+        partitioned target fails the call itself — THAT is the signal."""
+        return {
+            "node": n,
+            "inflight": engine.queue.inflight,
+            "inflight_peak": engine.queue.inflight_peak,
+            "completed": engine.queue.completed,
+            "tasks_run": engine.tasks_run,
+            "wal_segments": engine.wal_segments,
+        }
+
     fabric.register(n, "admit", admit)
     fabric.register(n, "complete", complete)
     fabric.register(n, "run_task", run_task)
     fabric.register(n, "submit_task", submit_task)
     fabric.register(n, "wal_append", wal_append)
+    fabric.register(n, "ping", ping)
 
 
 def serve_engines(engines: Sequence[OffloadEngine], fabric: RpcFabric,

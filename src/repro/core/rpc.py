@@ -18,7 +18,9 @@ from __future__ import annotations
 
 import pickle
 import queue
+import random
 import threading
+import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -108,6 +110,24 @@ class RpcFabric:
     def register(self, node: str, method: str, fn: Callable) -> None:
         with self._lock:
             self._handlers[(node, method)] = fn
+
+    def unregister(self, node: str) -> int:
+        """Tear down every endpoint of ``node`` (a target leaving the
+        cluster for good). Returns the number of handlers removed."""
+        with self._lock:
+            gone = [k for k in self._handlers if k[0] == node]
+            for k in gone:
+                del self._handlers[k]
+            return len(gone)
+
+    def has_endpoint(self, node: str, method: str = "submit_task") -> bool:
+        """Whether ``node`` ever registered ``method``. A registered target
+        whose engine never came up has NO endpoint and must be skipped by
+        load balancing; a *dead* target still has one — death is a wire
+        property, discovered (and injected, see ``FaultyFabric``) at call
+        time, not a registry property."""
+        with self._lock:
+            return (node, method) in self._handlers
 
     def _handler(self, dst: str, method: str) -> Callable:
         with self._lock:
@@ -306,3 +326,157 @@ class RpcFabric:
         with self._lock:
             self.records.clear()
             self.bytes_by_link.clear()
+
+
+@dataclass
+class FaultRule:
+    """Per-target fault probabilities/latency; ``methods=None`` = all."""
+
+    drop: float = 0.0  # P(message raises RpcError instead of delivering)
+    delay_s: float = 0.0  # fixed sleep before the handler runs
+    duplicate: float = 0.0  # P(at-least-once: the handler runs twice)
+    methods: Optional[frozenset] = None
+
+    def applies(self, method: str) -> bool:
+        return self.methods is None or method in self.methods
+
+
+class FaultyFabric(RpcFabric):
+    """RpcFabric with deterministic per-target fault injection — the
+    ClusterRouter's test plane (and fig19's kill-one-of-N harness).
+
+    Faults are evaluated at *delivery* time (when a worker resolves the
+    handler), not submission time, so a message already in flight when its
+    target is killed dies on the wire exactly like a real mid-batch crash:
+
+      * ``kill(node)`` / ``revive(node)`` — every delivery raises
+        ``RpcError`` (the endpoint stays registered: death is a wire
+        property, unlike a target whose engine never came up);
+      * ``isolate(node)`` / ``heal(node)`` — network partition; same wire
+        behaviour as death, tracked separately so tests can distinguish a
+        crashed target from a partitioned-but-healthy one;
+      * ``kill_after(node, n)`` — the target executes ``n`` more
+        sub-calls, then dies *mid-batch*: later sub-calls of the same wire
+        message (and everything after) raise;
+      * ``drop(node, p)`` / ``delay(node, s)`` / ``duplicate(node, p)`` —
+        per-message loss, added latency, and at-least-once re-delivery,
+        optionally scoped to a method set (e.g. drop only ``ping`` to
+        simulate a target that serves tasks but stops reporting health).
+
+    The RNG is seeded, so single-threaded fault schedules replay exactly;
+    under concurrent workers the *set* of faults is seed-stable but their
+    assignment to interleaved messages follows thread scheduling — tests
+    that need exactness use probabilities 0/1 or sequenced calls.
+    """
+
+    def __init__(self, *, seed: int = 0, workers: int = 8):
+        super().__init__(workers=workers)
+        self._fault_lock = threading.Lock()
+        self._rng = random.Random(seed)
+        self._rules: Dict[str, FaultRule] = {}
+        self._dead: set = set()
+        self._isolated: set = set()
+        self._kill_after: Dict[str, int] = {}
+        self.injected = {"dead": 0, "partitioned": 0, "dropped": 0,
+                         "delayed": 0, "duplicated": 0}
+
+    # ------------------------------------------------------------- control
+    def kill(self, node: str) -> None:
+        with self._fault_lock:
+            self._dead.add(node)
+            self._kill_after.pop(node, None)
+
+    def revive(self, node: str) -> None:
+        with self._fault_lock:
+            self._dead.discard(node)
+            self._kill_after.pop(node, None)
+
+    def kill_after(self, node: str, n_calls: int) -> None:
+        """Die after executing ``n_calls`` more sub-calls (mid-batch)."""
+        with self._fault_lock:
+            self._kill_after[node] = n_calls
+
+    def isolate(self, node: str) -> None:
+        with self._fault_lock:
+            self._isolated.add(node)
+
+    def heal(self, node: str) -> None:
+        with self._fault_lock:
+            self._isolated.discard(node)
+
+    def drop(self, node: str, p: float = 1.0, methods=None) -> None:
+        self._rule(node).drop = p
+        self._scope(node, methods)
+
+    def delay(self, node: str, seconds: float, methods=None) -> None:
+        self._rule(node).delay_s = seconds
+        self._scope(node, methods)
+
+    def duplicate(self, node: str, p: float = 1.0, methods=None) -> None:
+        self._rule(node).duplicate = p
+        self._scope(node, methods)
+
+    def clear_faults(self, node: Optional[str] = None) -> None:
+        with self._fault_lock:
+            if node is None:
+                self._rules.clear()
+                self._dead.clear()
+                self._isolated.clear()
+                self._kill_after.clear()
+            else:
+                self._rules.pop(node, None)
+                self._dead.discard(node)
+                self._isolated.discard(node)
+                self._kill_after.pop(node, None)
+
+    def _rule(self, node: str) -> FaultRule:
+        with self._fault_lock:
+            return self._rules.setdefault(node, FaultRule())
+
+    def _scope(self, node: str, methods) -> None:
+        with self._fault_lock:
+            self._rules[node].methods = (
+                None if methods is None else frozenset(methods)
+            )
+
+    # ------------------------------------------------------------ delivery
+    def _handler(self, dst: str, method: str) -> Callable:
+        fn = super()._handler(dst, method)  # no-endpoint raises first
+        with self._fault_lock:
+            rule = self._rules.get(dst)
+            scoped = rule is not None and rule.applies(method)
+            if scoped and rule.drop and self._rng.random() < rule.drop:
+                self.injected["dropped"] += 1
+                raise RpcError(
+                    f"message {method!r} to {dst!r} dropped (injected)")
+            delay_s = rule.delay_s if scoped else 0.0
+            dup = bool(scoped and rule.duplicate
+                       and self._rng.random() < rule.duplicate)
+
+        def wrapped(*args, **kwargs):
+            with self._fault_lock:
+                if dst in self._dead:
+                    self.injected["dead"] += 1
+                    raise RpcError(f"node {dst!r} is dead (injected)")
+                if dst in self._isolated:
+                    self.injected["partitioned"] += 1
+                    raise RpcError(f"node {dst!r} unreachable "
+                                   "(injected partition)")
+                if dst in self._kill_after:
+                    self._kill_after[dst] -= 1
+                    if self._kill_after[dst] < 0:
+                        del self._kill_after[dst]
+                        self._dead.add(dst)
+                        self.injected["dead"] += 1
+                        raise RpcError(
+                            f"node {dst!r} died mid-batch (injected)")
+            if delay_s > 0.0:
+                self.injected["delayed"] += 1
+                time.sleep(delay_s)
+            result = fn(*args, **kwargs)
+            if dup:
+                self.injected["duplicated"] += 1
+                fn(*args, **kwargs)  # at-least-once: idempotent re-delivery
+            return result
+
+        return wrapped

@@ -207,6 +207,23 @@ class Cluster:
         1-server trainer resource serializes batches in arrival order)."""
         yield ("use", self.trainer_i[initiator], n_images)
 
+    def probe(self, initiator: int, n_targets: int = 1):
+        """One router heartbeat round: a tiny RPC per probed target (the
+        ``ping`` endpoint) — pure round trips, no data movement. Modeled
+        per-target so a big fleet's health plane has visible cost."""
+        for t in range(n_targets):
+            yield from self.rpc(initiator, 512, target=t % self.n_storage)
+
+    def takeover(self, initiator: int, *, journal_records: int = 0,
+                 meta_bytes: float = 256 * 1024, target: int = 0):
+        """Standby failover = crash_remount executed by a DIFFERENT
+        initiator (the standby's own link/CPU pay for the replay) plus
+        one superblock commit to fence the reclaimed orphans."""
+        yield from self.crash_remount(initiator,
+                                      journal_records=journal_records,
+                                      meta_bytes=meta_bytes, target=target)
+        yield from self.storage_write(initiator, 64 * 1024, target=target)
+
     def crash_remount(self, initiator: int, *, journal_records: int = 0,
                       meta_bytes: float = 256 * 1024, target: int = 0):
         """Initiator crash/re-mount: re-read the superblock area (metadata

@@ -8,6 +8,7 @@ import numpy as np
 
 from repro.core import AcceptAll, BlockDevice, OffloadFS, RpcFabric
 from repro.core.admission import RejectAll
+from repro.core.rpc import FaultyFabric
 from repro.core.engine import OffloadEngine
 from repro.core.lsm import DBConfig, OffloadDB
 from repro.core.lsm import compaction as C
@@ -16,11 +17,12 @@ from repro.data.ingest import IngestState, PrepPipeline, tokens_from_batch
 from repro.data.offload_prep import OffloadPrep, stub_preprocess
 
 
-def build_plane(n_targets=2, policies=None, *, mount=False, dev=None):
+def build_plane(n_targets=2, policies=None, *, mount=False, dev=None,
+                fabric=None):
     dev = dev or BlockDevice(num_blocks=1 << 17)
     fs = OffloadFS.mount(dev, node="init0") if mount \
         else OffloadFS(dev, node="init0")
-    fabric = RpcFabric()
+    fabric = fabric or RpcFabric()
     engines = []
     for t in range(n_targets):
         eng = OffloadEngine(fs, node=f"storage{t}", cache_blocks=1024)
@@ -205,11 +207,14 @@ def test_rejected_share_reroutes_before_local_fallback():
 
 
 def test_reroute_wire_error_falls_back_local_and_counts_ran_local():
-    """Regression: a reroute retry that dies on the wire (no handler on
-    the alt target) still completes the share locally AND counts it in
-    ran_local — the stats cover every completed task."""
-    dev, fs, fabric, engines, off = build_plane(1, policies=[RejectAll()])
-    off.add_target("ghost")  # registered target, no fabric endpoint
+    """Regression: a reroute retry that dies on the wire (the alt target
+    crashed after its engine came up) still completes the share locally
+    AND counts it in ran_local — the stats cover every completed task.
+    (An engine that never came up is a different case: no endpoint → the
+    target is skipped at pick time, see least_loaded_other.)"""
+    dev, fs, fabric, engines, off = build_plane(
+        2, policies=[RejectAll(), AcceptAll()], fabric=FaultyFabric(seed=1))
+    fabric.kill("storage1")  # endpoint registered, but dead on the wire
     prep = make_prep(fs, off)
     paths = prep.materialize_corpus(8, max_side=64)
     remote, _ = prep.plan_shares(len(paths))
@@ -220,7 +225,112 @@ def test_reroute_wire_error_falls_back_local_and_counts_ran_local():
         assert where == off.node  # completed on the initiator
     assert off.stats.rerouted == len(specs)
     assert off.stats.ran_local == len(specs)
+    assert fabric.injected["dead"] == len(specs)
     assert not fs._leases
+
+
+def _run_shares(off, prep, paths, *, reroute=True):
+    """Submit every planned remote share (streamed) and return the tensor
+    lists in spec order plus the where-ran labels."""
+    remote, _ = prep.plan_shares(len(paths))
+    specs = [prep.share_spec(t, ids, paths, epoch_seed=1, reroute=reroute)
+             for t, ids in remote]
+    tensors, wheres = [], []
+    for fut in off.submit_many(specs, stream=True):
+        t, where = fut.result(timeout=30)
+        tensors.append(t)
+        wheres.append(where)
+    return tensors, wheres
+
+
+def test_stream_target_death_after_admission_lands_byte_identical():
+    """Satellite: a target that dies AFTER a streamed share was admitted
+    into the plan but BEFORE completion — the per-share lease is released
+    and the share lands via reroute-or-local, byte-identical to a healthy
+    run. Death is injected at delivery time, so the wire batch was already
+    committed to the dead target when it fails."""
+    dev, fs, fabric, engines, off = build_plane(2)
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(8, max_side=64)
+    golden, _ = _run_shares(off, prep, paths)
+
+    dev2, fs2, fabric2, engines2, off2 = build_plane(
+        2, fabric=FaultyFabric(seed=7))
+    prep2 = make_prep(fs2, off2)
+    paths2 = prep2.materialize_corpus(8, max_side=64)
+    fabric2.kill("storage1")  # dies with its batch already in flight
+    got, wheres = _run_shares(off2, prep2, paths2)
+    assert fabric2.injected["dead"] > 0
+    assert "storage1" not in wheres  # landed via reroute or local
+    assert not fs2._leases  # every per-share lease released
+    assert len(got) == len(golden)
+    for a, b in zip(golden, got):
+        for x, y in zip(a, b):
+            assert np.array_equal(x, y)
+
+
+def test_stream_target_death_mid_batch_at_least_once_exactly_one_landing():
+    """Satellite: the target executes the FIRST sub-call of its wire batch
+    then dies mid-batch. The whole batch surfaces as a wire error, so the
+    already-executed share re-runs elsewhere — at-least-once execution,
+    but each share lands exactly once and bytes still match the healthy
+    run (idempotent re-run under the original, still-quiesced lease)."""
+    def one_image_shares(off, prep, paths):
+        # one spec per image so each target's wire batch carries SEVERAL
+        # sub-calls — kill_after can then strike between them
+        remote, _ = prep.plan_shares(len(paths))
+        specs = [prep.share_spec(t, [i], paths, epoch_seed=1, reroute=True)
+                 for t, ids in remote for i in ids]
+        tensors, wheres = [], []
+        for fut in off.submit_many(specs, stream=True):
+            t, where = fut.result(timeout=30)
+            tensors.append(t)
+            wheres.append(where)
+        return tensors, wheres
+
+    dev, fs, fabric, engines, off = build_plane(2)
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(16, max_side=64)
+    golden, _ = one_image_shares(off, prep, paths)
+
+    dev2, fs2, fabric2, engines2, off2 = build_plane(
+        2, fabric=FaultyFabric(seed=7))
+    prep2 = make_prep(fs2, off2)
+    paths2 = prep2.materialize_corpus(16, max_side=64)
+    fabric2.kill_after("storage1", 1)  # one sub-call runs, then death
+    got, wheres = one_image_shares(off2, prep2, paths2)
+    assert fabric2.injected["dead"] > 0
+    assert engines2[1].tasks_run >= 1  # it really did execute one share
+    assert "storage1" not in wheres
+    assert not fs2._leases
+    for a, b in zip(golden, got):
+        for x, y in zip(a, b):
+            assert np.array_equal(x, y)
+
+
+def test_stream_death_without_reroute_surfaces_error_and_releases_lease():
+    """A streamed share WITHOUT reroute=True keeps strict semantics: the
+    wire error surfaces on its future — but the lease is still released
+    (no leak) and the volume stays usable."""
+    dev, fs, fabric, engines, off = build_plane(
+        2, fabric=FaultyFabric(seed=3))
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(8, max_side=64)
+    fabric.kill("storage1")
+    remote, _ = prep.plan_shares(len(paths))
+    specs = [prep.share_spec(t, ids, paths, epoch_seed=1)
+             for t, ids in remote]
+    futs = off.submit_many(specs, stream=True)
+    outcomes = {"ok": 0, "error": 0}
+    for (t, _), fut in zip(remote, futs):
+        try:
+            fut.result(timeout=30)
+            outcomes["ok"] += 1
+        except Exception:
+            assert t == "storage1"
+            outcomes["error"] += 1
+    assert outcomes["error"] >= 1 and outcomes["ok"] >= 1
+    assert not fs._leases  # errored shares released their leases too
 
 
 def test_all_targets_rejecting_falls_back_local():
