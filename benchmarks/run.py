@@ -35,6 +35,7 @@ MODULES = [
     "benchmarks.fig17_rebalance",
     "benchmarks.fig18_prep_pipeline",
     "benchmarks.fig19_router_failover",
+    "benchmarks.fig20_kv_serving",
     "benchmarks.roofline_report",
 ]
 
@@ -46,6 +47,7 @@ SMOKE_MODULES = [
     "benchmarks.fig17_rebalance",
     "benchmarks.fig18_prep_pipeline",
     "benchmarks.fig19_router_failover",
+    "benchmarks.fig20_kv_serving",
     "benchmarks.roofline_report",
 ]
 

@@ -24,6 +24,7 @@ import itertools
 import struct
 import threading
 import zlib
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -51,6 +52,10 @@ class Lease:
     read_blocks: frozenset
     write_blocks: frozenset
     done: bool = False
+    # physical (block, nblocks) runs for scoped leases (``write_lease`` /
+    # ``read_lease``) so the holder can address its bytes without re-walking
+    # the extent tree; None for plain ``grant_lease`` grants
+    runs: Optional[List[Tuple[int, int]]] = None
 
 
 class LeaseViolation(Exception):
@@ -632,11 +637,6 @@ class OffloadFS:
                         "the reader"
                     )
             new_raw = self.extmgr.alloc(nblocks, shard=dst_shard)
-            try:
-                lease = self.grant_lease((), new_raw)  # journaled grant
-            except BaseException:
-                self.extmgr.free(new_raw)
-                raise
             # rebase the destination runs onto the file's offsets and pair
             # each (src, dst) copy run
             new_extents: List[Extent] = []
@@ -659,29 +659,32 @@ class OffloadFS:
                     rem -= take
             committed = False
             try:
-                if self._migration_failpoint:
-                    self._migration_failpoint("pre_copy")
-                for src, dst, n in copies:
-                    data = self.dev.read_blocks(src, n, node=self.node)
-                    self.authorized_write(lease, dst, data, node=self.node)
-                if self._migration_failpoint:
-                    self._migration_failpoint("post_copy")
-                inode.extents = new_extents
-                inode.shard = dst_shard
-                inode.mtime = self._tick()
-                self.flush_metadata()  # commit point: new placement durable
-                committed = True
-                if self._migration_failpoint:
-                    self._migration_failpoint("post_swap")
+                # scoped journaled grant: released on exit or plain failure;
+                # a MigrationCrash (BaseException) leaves it outstanding for
+                # remount fencing, exactly as a real crash would
+                with self.lease_scope((), new_raw) as lease:
+                    if self._migration_failpoint:
+                        self._migration_failpoint("pre_copy")
+                    for src, dst, n in copies:
+                        data = self.dev.read_blocks(src, n, node=self.node)
+                        self.authorized_write(lease, dst, data, node=self.node)
+                    if self._migration_failpoint:
+                        self._migration_failpoint("post_copy")
+                    inode.extents = new_extents
+                    inode.shard = dst_shard
+                    inode.mtime = self._tick()
+                    self.flush_metadata()  # commit point: placement durable
+                    committed = True
+                    if self._migration_failpoint:
+                        self._migration_failpoint("post_swap")
             except Exception:
                 if not committed:
                     # failed migration (not a simulated crash): roll back —
-                    # old placement restored, lease released, copy reclaimed
-                    # (trimmed: the partial copy must not leak file bytes
-                    # into blocks a later fallocate hands someone else)
+                    # old placement restored, copy reclaimed (trimmed: the
+                    # partial copy must not leak file bytes into blocks a
+                    # later fallocate hands someone else)
                     inode.extents = old_extents
                     inode.shard = old_pin
-                    self.release_lease(lease)
                     self.extmgr.free(new_raw)
                     for e in new_raw:
                         self.dev.trim(e.block, e.nblocks)
@@ -689,12 +692,10 @@ class OffloadFS:
                 # past the commit point the swap is already durable: rolling
                 # back in memory would free blocks the on-disk superblock
                 # references — finish the cycle instead, then propagate
-                self.release_lease(lease)
                 self.extmgr.free(old_extents)
                 for e in old_extents:
                     self.dev.trim(e.block, e.nblocks)
                 raise
-            self.release_lease(lease)
             self.extmgr.free(old_extents)
             for e in old_extents:
                 self.dev.trim(e.block, e.nblocks)
@@ -834,6 +835,71 @@ class OffloadFS:
                     del self._leased_blocks[b]
             if existed and lease.write_blocks:
                 self.lease_journal.append_release(lease.task_id)
+
+    # ------------------------------------------------- scoped (CM) leases
+    @contextmanager
+    def lease_scope(self, read_extents: Sequence[Extent],
+                    write_extents: Sequence[Extent]):
+        """Context-manager lease: grant on entry, release on exit — so
+        release-on-error is structural, not a convention every call site
+        re-implements. One deliberate asymmetry: a ``BaseException`` that
+        is not an ``Exception`` (``MigrationCrash``-style simulated process
+        death) propagates WITHOUT releasing, leaving the journaled grant
+        outstanding exactly as a real crash would — remount replay +
+        ``reclaim_orphans()`` is the path that cleans it up."""
+        lease = self.grant_lease(read_extents, write_extents)
+        try:
+            yield lease
+        except Exception:
+            self.release_lease(lease)
+            raise
+        else:
+            self.release_lease(lease)
+
+    @contextmanager
+    def write_lease(self, path: str, *, offset: int = 0,
+                    length: Optional[int] = None):
+        """``with fs.write_lease(path) as lease:`` — the
+        ``prepare_write``/grant/release triple as one scoped construct.
+        Allocates covering blocks (growing the file to ``offset+length``),
+        grants a journaled write lease over exactly those runs, and
+        releases it on exit (crash-simulation semantics as
+        ``lease_scope``). The physical runs ride on ``lease.runs``."""
+        with self._lock:
+            if length is None:
+                inode = self._inodes[self._names[path]]
+                length = max(0, inode.size - offset)
+            runs, lease = self.prepare_write(path, offset, length, lease=True)
+            lease.runs = runs
+        try:
+            yield lease
+        except Exception:
+            self.release_lease(lease)
+            raise
+        else:
+            self.release_lease(lease)
+
+    @contextmanager
+    def read_lease(self, path: str, *, offset: int = 0,
+                   length: Optional[int] = None):
+        """Scoped READ lease over the blocks backing ``path`` — decode-side
+        attach: the holder may ``authorized_read`` them, and migration /
+        delete are fenced off for the duration. Read-only leases are not
+        journaled (they die harmlessly with the process), so release is
+        unconditional on exit. Runs ride on ``lease.runs``."""
+        with self._lock:
+            inode = self._inodes[self._names[path]]
+            if length is None:
+                length = max(0, inode.size - offset)
+            runs = list(self._extent_blocks(inode, offset, length))
+        lease = self.grant_lease(
+            [Extent(0, blk, n) for blk, n in runs], ()
+        )
+        lease.runs = runs
+        try:
+            yield lease
+        finally:
+            self.release_lease(lease)
 
     # ---------------------------------------------- target-side block APIs
     # (called by the Offload Engine on behalf of an authorized task; the

@@ -337,12 +337,13 @@ class OffloadDB:
         )
         target = self.cfg.peer_target
         if self._offload_ok(task, level):
-            result, where = self.off.submit(
-                task, *args,
-                read_extents=read_extents, write_extents=write_extents,
-                target=target, mtime=mtime,
-                bypass_cache=False, **kw,
-            )
+            result, where = self.off.submit({
+                "task": task, "args": args, "kwargs": kw,
+                "read_extents": read_extents,
+                "write_extents": write_extents,
+                "target": target, "mtime": mtime,
+                "bypass_cache": False,
+            })
             return result, where
         # run on the initiator (Local mode / rejected)
         lease = self.fs.grant_lease(read_extents, write_extents)
@@ -506,7 +507,7 @@ class OffloadDB:
                     "read_extents": re_, "write_extents": we_,
                     "target": self.cfg.peer_target, "mtime": mtime,
                 })
-            for j, (results, where) in zip(jobs, self.off.submit_many(specs)):
+            for j, (results, where) in zip(jobs, self.off.submit(specs)):
                 j["results"], j["where"] = results, where
             return
         for j in jobs:

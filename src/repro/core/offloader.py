@@ -20,21 +20,24 @@ registry* with pluggable load balancing:
     different shards hit disjoint NVMe FIFOs; tasks without extents fall
     back to least_outstanding
 
-and three submission shapes:
+and ONE submission entry point:
 
-  * ``submit``       — one task, ONE wire message (admit + run + complete
-    coalesced server-side; ``coalesce=False`` keeps the legacy 3-message
-    handshake for comparison)
-  * ``submit_async`` — returns an ``OffloadFuture``; the lease is released
-    and fallback-to-local executed at resolution
-  * ``submit_many``  — a batch of tasks load-balanced across targets, ONE
-    wire message per target (``RpcFabric.call_batch``), executed
-    concurrently across targets; ``stream=True`` returns one
-    ``OffloadFuture`` per spec instead of a barrier, so a consumer (the
-    PrepPipeline ingestion plane) can overlap per-share completions with
-    its own work. Streamed specs may set ``reroute=True``: an
-    admission-rejected share is retried once on the least-loaded *other*
-    target before the local fallback runs.
+  * ``submit(specs, *, stream=False, reroute=False, async_=False)`` —
+    specs (one dict or a list) are load-balanced across targets, ONE wire
+    message per target (``RpcFabric.call_batch``), and every spec resolves
+    to the single result shape ``(result, where_ran)`` through an
+    ``OffloadFuture``. Sync by default (wait for all); ``stream=True`` /
+    ``async_=True`` return the futures so a consumer (the PrepPipeline
+    ingestion plane, the KV-cache fetch path) overlaps per-share
+    completions with its own work; ``reroute=True`` retries an
+    admission-rejected or wire-failed share once on the least-loaded
+    *other* target before the local fallback runs.
+
+Deprecated shims kept for pre-consolidation callers: ``submit_task`` (one
+task, one coalesced wire message — ``coalesce=False`` keeps the legacy
+3-message handshake for comparison; also reachable as
+``submit("task", *args, ...)``), ``submit_async`` (single-task future) and
+``submit_many`` (barrier batch: all-or-nothing on wire failure).
 """
 from __future__ import annotations
 
@@ -305,6 +308,66 @@ class TaskOffloader:
 
     def submit(
         self,
+        task_or_specs,
+        *args,
+        stream: bool = False,
+        reroute: bool = False,
+        async_: bool = False,
+        **kwargs,
+    ):
+        """THE submission entry point. Canonical form: ``submit(specs)``
+        where ``specs`` is one spec dict or a sequence of them (keys
+        ``task``, ``args``, plus optional ``kwargs``, ``read_extents``,
+        ``write_extents``, ``target``, ``mtime``, ``bypass_cache``,
+        ``reroute``). Every spec becomes one ``OffloadFuture`` resolving to
+        ``(result, where_ran)`` — the single result shape of the plane:
+
+          * default (sync): wait for every future, return the resolved
+            ``(result, where)`` list (or the bare tuple for a single dict
+            spec); the first failure re-raises after all shares settle so
+            no lease outlives the call.
+          * ``stream=True`` / ``async_=True``: return the future(s)
+            immediately — per-spec completion streaming; each future also
+            carries ``.lease``/``.target`` for cancellation.
+          * ``reroute=True``: default every spec into the
+            pushback/wire-failure reroute path (spec-level value wins).
+
+        Legacy form: ``submit("task", *args, read_extents=..., ...)`` —
+        the pre-consolidation single-task signature, kept as a shim and
+        routed to :meth:`submit_task`."""
+        if isinstance(task_or_specs, str):
+            if stream or async_ or reroute:
+                raise TypeError(
+                    "stream/async_/reroute apply to spec submission; the "
+                    "legacy submit(task, *args) form takes none of them"
+                )
+            return self.submit_task(task_or_specs, *args, **kwargs)
+        if args or kwargs:
+            raise TypeError("spec submission takes no extra args/kwargs")
+        single = isinstance(task_or_specs, dict)
+        specs = [task_or_specs] if single else list(task_or_specs)
+        if reroute:
+            specs = [
+                s if "reroute" in s else {**s, "reroute": True} for s in specs
+            ]
+        futs = self._submit_many_stream(specs)
+        if stream or async_:
+            return futs[0] if single else futs
+        results: List[Any] = []
+        first_exc: Optional[BaseException] = None
+        for f in futs:
+            try:
+                results.append(f.result())
+            except BaseException as e:  # noqa: BLE001 - re-raised below
+                results.append(None)
+                if first_exc is None:
+                    first_exc = e
+        if first_exc is not None:
+            raise first_exc
+        return results[0] if single else results
+
+    def submit_task(
+        self,
         task: str,
         *args,
         read_extents: Sequence[Extent] = (),
@@ -315,9 +378,11 @@ class TaskOffloader:
         coalesce: Optional[bool] = None,
         **kwargs,
     ):
-        """Offload `task` to `target` (default: load-balanced pick). Returns
-        (result, where_ran). The initiator quiesces on the leased write set
-        for the duration (no DLM — lease discipline instead)."""
+        """Deprecated shim (pre-consolidation API, kept so existing callers
+        run unchanged — use :meth:`submit`): offload one `task` to `target`
+        (default: load-balanced pick) and block. Returns (result,
+        where_ran). The initiator quiesces on the leased write set for the
+        duration (no DLM — lease discipline instead)."""
         coalesce = self.coalesce if coalesce is None else coalesce
         dst = target or self._route(read_extents, write_extents)
         lease = self.fs.grant_lease(read_extents, write_extents)
@@ -368,7 +433,8 @@ class TaskOffloader:
         bypass_cache: bool = False,
         **kwargs,
     ) -> OffloadFuture:
-        """Non-blocking submit. The lease stays outstanding (the initiator
+        """Deprecated shim (use ``submit(spec, async_=True)``): non-blocking
+        single-task submit. The lease stays outstanding (the initiator
         keeps quiescing on the write set) until the future resolves; the
         rejected-task fallback runs at resolution. Always a single
         coalesced wire message — async submission has no legacy-handshake
@@ -414,7 +480,8 @@ class TaskOffloader:
 
     def submit_many(self, specs: Sequence[dict], *,
                     stream: bool = False) -> List[Any]:
-        """Load-balanced batch submission: each spec is a dict with keys
+        """Deprecated shim (use ``submit(specs)`` / ``submit(specs,
+        stream=True)``). Load-balanced batch submission: each spec is a dict with keys
         ``task``, ``args`` (tuple), plus optional ``kwargs``,
         ``read_extents``, ``write_extents``, ``target``, ``mtime``,
         ``bypass_cache``, ``reroute`` (stream only). One wire message per
@@ -652,6 +719,10 @@ class TaskOffloader:
                     s.get("read_extents", ()), s.get("write_extents", ())
                 )
                 self._begin(dst, self._lease_blocks(lease))
+                # same contract as submit_async: the router's cancellation
+                # path revokes the in-flight lease through the journal
+                futs[idx].lease = lease
+                futs[idx].target = dst
                 plan.append((idx, s, dst, lease))
         except BaseException:
             for _, _, d, lease in plan:

@@ -74,6 +74,7 @@ class Member:
 class RouterStats:
     probes: int = 0
     probe_failures: int = 0
+    heartbeats: int = 0  # background probe rounds (start_heartbeat pacer)
     quarantined: int = 0
     rejoined: int = 0
     shed: int = 0
@@ -138,6 +139,8 @@ class ClusterRouter:
         self._lock = threading.RLock()
         self.members: Dict[str, Member] = {}
         self._queue: List[OffloadRequest] = []  # FIFO of held background work
+        self._hb_thread: Optional[threading.Thread] = None
+        self._hb_stop: Optional[threading.Event] = None
         self.stats = RouterStats()
         now = self._clock()
         for t in list(off.targets):  # adopt the offloader's initial set
@@ -269,6 +272,47 @@ class ClusterRouter:
         self.sweep_stale()
         self.pump()
         return out
+
+    def start_heartbeat(self, interval: float) -> None:
+        """Background probe pacing: run ``probe()`` every ``interval``
+        seconds on a daemon thread until ``stop_heartbeat()`` — the router
+        drives its own health plane instead of being caller-paced. Pacing
+        is wall-clock (``Event.wait``); the injected ``clock`` still stamps
+        telemetry ages, so deterministic tests can mix both. A probe round
+        that raises is swallowed: the pacer must outlive any single fault
+        (that is its whole job)."""
+        if interval <= 0:
+            raise ValueError("heartbeat interval must be positive")
+        with self._lock:
+            if self._hb_thread is not None and self._hb_thread.is_alive():
+                raise RuntimeError("heartbeat already running")
+            stop = threading.Event()
+            self._hb_stop = stop
+
+            def _loop():
+                while not stop.wait(interval):
+                    try:
+                        self.probe()
+                    except Exception:  # noqa: BLE001 - pacer survives faults
+                        pass
+                    with self._lock:
+                        self.stats.heartbeats += 1
+
+            t = threading.Thread(
+                target=_loop, name="router-heartbeat", daemon=True
+            )
+            self._hb_thread = t
+        t.start()
+
+    def stop_heartbeat(self) -> None:
+        """Stop the background pacer (idempotent; joins the thread)."""
+        with self._lock:
+            t, stop = self._hb_thread, self._hb_stop
+            self._hb_thread = self._hb_stop = None
+        if stop is not None:
+            stop.set()
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout=5.0)
 
     def sweep_stale(self) -> List[str]:
         """Quarantine every LIVE member whose telemetry age exceeds

@@ -9,7 +9,7 @@ is that stage for the reproduction:
 
   * a **producer thread** walks the epoch's deterministic permutation and
     issues each minibatch's remote shares through the offloader's
-    streaming plane (``TaskOffloader.submit_many(stream=True)`` — one wire
+    streaming plane (``TaskOffloader.submit(specs, stream=True)`` — one wire
     batch per target, one future per share), keeping up to ``window``
     minibatches' shares in flight per target ahead of consumption;
   * the producer computes the **local share** of minibatch *b* while *b*'s
@@ -195,7 +195,7 @@ class PrepPipeline:
                                  reroute=True)
             for t, ids in remote
         ]
-        futs = self.prep.off.submit_many(specs, stream=True) if specs else []
+        futs = self.prep.off.submit(specs, stream=True) if specs else []
         job = {
             "epoch": epoch, "index": bidx, "seed": bseed, "paths": bpaths,
             "local_ids": local_ids,

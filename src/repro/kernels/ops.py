@@ -36,10 +36,93 @@ def flash_attention(q, k, v, *, causal=True, softcap=0.0, block_q=256, block_kv=
     return o.reshape(B, KV, G, Sq, D).transpose(0, 3, 1, 2, 4)
 
 
-@jax.jit
+# one bitonic_merge invocation holds both runs in VMEM (kvmerge docstring:
+# n ≤ 64 Ki keys per side); longer runs tile through the kernel below
+MERGE_MAX_RUN = 1 << 16
+
+
+def _key_sentinel(dtype):
+    """Largest representable key — the padding value for short runs. Real
+    keys must stay strictly below it."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _merge_padded(a_keys, a_vals, b_keys, b_vals, *, n):
+    """Pad both runs to length n (power of two) with key sentinels and run
+    the kernel once. Padding happens OUTSIDE the kernel (host/jnp level):
+    the kernel geometry stays fixed power-of-two as the VPU wants it."""
+    sent = _key_sentinel(a_keys.dtype)
+
+    def pad(x, fill):
+        return jnp.concatenate(
+            [x, jnp.full((n - x.shape[0],), fill, x.dtype)]
+        )
+
+    return _kv.bitonic_merge(
+        pad(a_keys, sent), pad(a_vals, jnp.array(0, a_vals.dtype)),
+        pad(b_keys, sent), pad(b_vals, jnp.array(0, b_vals.dtype)),
+        interpret=INTERPRET,
+    )
+
+
+def _merge_diag(ak, bk, d):
+    """Merge-path partition: how many of the first ``d`` merged outputs
+    come from run a (ties consume a first). Host-side binary search."""
+    lo, hi = max(0, d - bk.shape[0]), min(d, ak.shape[0])
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if ak[mid] <= bk[d - mid - 1]:
+            lo = mid + 1
+        else:
+            hi = mid
+    return lo
+
+
 def merge_sorted(a_keys, a_vals, b_keys, b_vals):
-    """Merge two sorted runs (equal power-of-two length)."""
-    return _kv.bitonic_merge(a_keys, a_vals, b_keys, b_vals, interpret=INTERPRET)
+    """Merge two sorted (key, payload) runs of ANY lengths — they need not
+    be equal or powers of two. Short runs are sentinel-padded up to the
+    kernel's power-of-two geometry; runs past the VMEM bound
+    (``MERGE_MAX_RUN`` per side) are tiled through the kernel along the
+    merge path (one host-side binary search per tile boundary). Keys must
+    be strictly below the dtype's maximum (the padding sentinel). Returns
+    (keys, vals) of length ``len(a) + len(b)``."""
+    a_keys, a_vals = jnp.asarray(a_keys), jnp.asarray(a_vals)
+    b_keys, b_vals = jnp.asarray(b_keys), jnp.asarray(b_vals)
+    na, nb = a_keys.shape[0], b_keys.shape[0]
+    total = na + nb
+    if na == 0 or nb == 0:
+        src_k, src_v = (b_keys, b_vals) if na == 0 else (a_keys, a_vals)
+        return src_k, src_v
+    n = 1 << max(0, (max(na, nb) - 1).bit_length())
+    if n <= MERGE_MAX_RUN:
+        ok, ov = _merge_padded(a_keys, a_vals, b_keys, b_vals, n=n)
+        return ok[:total], ov[:total]
+    # tiled: output tile t covers merged positions [t*T, (t+1)*T); the
+    # merge-path diagonal pins which slice of each run feeds the tile
+    ak = np.asarray(a_keys)
+    bk = np.asarray(b_keys)
+    T = MERGE_MAX_RUN
+    out_k, out_v = [], []
+    for d0 in range(0, total, T):
+        d1 = min(d0 + T, total)
+        i0, i1 = _merge_diag(ak, bk, d0), _merge_diag(ak, bk, d1)
+        j0, j1 = d0 - i0, d1 - i1
+        ta_k, ta_v = a_keys[i0:i1], a_vals[i0:i1]
+        tb_k, tb_v = b_keys[j0:j1], b_vals[j0:j1]
+        if i0 == i1 or j0 == j1:
+            k = jnp.concatenate([ta_k, tb_k])
+            v = jnp.concatenate([ta_v, tb_v])
+        else:
+            tn = 1 << max(0, (max(i1 - i0, j1 - j0) - 1).bit_length())
+            k, v = _merge_padded(ta_k, ta_v, tb_k, tb_v, n=tn)
+            k, v = k[: d1 - d0], v[: d1 - d0]
+        out_k.append(k)
+        out_v.append(v)
+    return jnp.concatenate(out_k), jnp.concatenate(out_v)
 
 
 def preprocess_image(img_chw, *, out_size=224, flip=False, mean=None, std=None):

@@ -31,15 +31,35 @@ def make_decode_step(model: Model, sample: str = "greedy"):
 
 
 def generate(model: Model, params, prompt_tokens, *, steps: int, max_len: int,
-             batch_extra: Optional[Dict[str, Any]] = None):
-    """Greedy generation loop (host-driven; each step jittable)."""
+             batch_extra: Optional[Dict[str, Any]] = None, kv_store=None):
+    """Greedy generation loop (host-driven; each step jittable).
+
+    With ``kv_store`` (a ``repro.serve.kvstore.KvCacheStore``) the loop runs
+    disaggregated: if the store already holds a cache for this exact prompt
+    the prefill is skipped entirely (decode attaches and streams it back
+    from OffloadFS); otherwise prefill runs, the cache is offloaded under a
+    write lease, the local copy is dropped, and decode proceeds from the
+    fetched copy — proving decode never depends on prefill-local state.
+    """
     batch = {"tokens": prompt_tokens}
     if batch_extra:
         batch.update(batch_extra)
     prefill = jax.jit(make_prefill_step(model, max_len))
     decode = jax.jit(make_decode_step(model))
-    logits, cache = prefill(params, batch)
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    if kv_store is not None and kv_store.contains(prompt_tokens):
+        cache = kv_store.fetch(prompt_tokens)
+        tok = kv_store.first_token(prompt_tokens)
+        if tok is None:
+            logits, _ = prefill(params, batch)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    else:
+        logits, cache = prefill(params, batch)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        if kv_store is not None:
+            kv_store.put(prompt_tokens, cache,
+                         first_token=jnp.asarray(tok))
+            del cache  # decode must run from the offloaded copy
+            cache = kv_store.fetch(prompt_tokens)
     out = [tok]
     for _ in range(steps - 1):
         tok, _, cache = decode(params, cache, tok)

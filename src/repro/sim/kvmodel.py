@@ -409,3 +409,137 @@ def run_kv(params: KVParams, *, instances: int = 1,
         stall_time=sum(state["stall"]),
         makespan=makespan,
     )
+
+
+# ===================================================================
+# KV-cache serving model (Fig. 20): disaggregated prefill → decode.
+#
+# Requests arrive in zipf-popular prompt-prefix families. With the
+# offload plane, a request whose family's cache is already stored on
+# the stripe its placement policy picks ATTACHES (read lease + stream
+# the cache back) instead of recomputing prefill; a miss pays prefill
+# on the initiator and stores the cache near-data for the rest of the
+# family. TTFT = time to the first decoded token. The recompute
+# baseline pays prefill on every request. ``n_storage`` moves the
+# fetch-bandwidth knee exactly like the Fig. 8 shard sweep; placement
+# controls whether a family ever re-finds its replica.
+# ===================================================================
+
+
+@dataclass
+class ServeParams:
+    n_requests: int = 400
+    n_clients: int = 8  # concurrent decode initiators
+    n_families: int = 24  # distinct prompt-prefix families
+    zipf_s: float = 1.1  # family popularity skew
+    prompt_tokens: int = 1024
+    prefill_cpu_per_tok: float = 160e-6  # initiator-seconds per prompt token
+    decode_cpu_per_tok: float = 1.2e-6
+    kv_bytes: float = 64 * MB  # packed cache per request
+    offload: bool = True  # False = recompute baseline
+    placement: str = "prefix"  # prefix | round_robin | random
+    n_storage: int = 4
+
+
+@dataclass
+class ServeResult:
+    ttft: List[float]
+    hit_rate: float
+    net_bytes: float
+    makespan: float
+
+    @property
+    def mean_ttft(self):
+        return sum(self.ttft) / len(self.ttft) if self.ttft else 0.0
+
+    @property
+    def p95_ttft(self):
+        s = sorted(self.ttft)
+        return s[min(len(s) - 1, int(len(s) * 0.95))] if s else 0.0
+
+
+def run_serve(params: ServeParams, *, spec: TestbedSpec = TESTBED) -> ServeResult:
+    sim = Sim()
+    n_storage = max(1, params.n_storage)
+    cl = Cluster(sim, spec, n_initiators=params.n_clients,
+                 n_storage=n_storage)
+
+    # deterministic zipf family stream (xorshift over the CDF — same
+    # sequence for every policy so the comparison is paired)
+    w = [(k + 1) ** -params.zipf_s for k in range(params.n_families)]
+    tot = sum(w)
+    cdf, acc = [], 0.0
+    for x in w:
+        acc += x / tot
+        cdf.append(acc)
+    rng = [12345]
+
+    def next_family() -> int:
+        x = rng[0]
+        x ^= (x << 13) & 0xFFFFFFFF
+        x ^= x >> 17
+        x ^= (x << 5) & 0xFFFFFFFF
+        rng[0] = x
+        u = x / 0xFFFFFFFF
+        for fam, c in enumerate(cdf):
+            if u <= c:
+                return fam
+        return params.n_families - 1
+
+    replicas = [set() for _ in range(params.n_families)]
+    counters = {"rr": 0, "rnd": 99991, "hits": 0, "net": 0.0}
+
+    def place(fam: int) -> int:
+        if params.placement == "round_robin":
+            s = counters["rr"] % n_storage
+            counters["rr"] += 1
+            return s
+        if params.placement == "random":
+            x = counters["rnd"]
+            x ^= (x << 13) & 0xFFFFFFFF
+            x ^= x >> 17
+            x ^= (x << 5) & 0xFFFFFFFF
+            counters["rnd"] = x
+            return x % n_storage
+        return fam % n_storage  # prefix-aware: family → stable stripe
+
+    ttft: List[float] = []
+    per_client = params.n_requests // params.n_clients
+
+    def client(i: int):
+        for _ in range(per_client):
+            fam = next_family()
+            t0 = sim.now
+            if params.offload:
+                shard = place(fam)
+                if shard in replicas[fam]:
+                    # attach: read lease RPC + stream the cache back
+                    counters["hits"] += 1
+                    yield from cl.rpc(i, 4096, target=shard)
+                    yield from cl.storage_read(i, params.kv_bytes,
+                                               target=shard)
+                    counters["net"] += params.kv_bytes
+                else:
+                    yield from cl.cpu_work(
+                        i, params.prompt_tokens * params.prefill_cpu_per_tok)
+                    yield from cl.rpc(i, 4096, target=shard)
+                    yield from cl.storage_write(i, params.kv_bytes,
+                                                target=shard)
+                    counters["net"] += params.kv_bytes
+                    replicas[fam].add(shard)
+            else:
+                yield from cl.cpu_work(
+                    i, params.prompt_tokens * params.prefill_cpu_per_tok)
+            yield from cl.cpu_work(i, params.decode_cpu_per_tok)
+            ttft.append(sim.now - t0)
+
+    for i in range(params.n_clients):
+        sim.spawn(client(i))
+    makespan = sim.run()
+    total = per_client * params.n_clients
+    return ServeResult(
+        ttft=ttft,
+        hit_rate=counters["hits"] / total if total else 0.0,
+        net_bytes=counters["net"],
+        makespan=makespan,
+    )

@@ -95,3 +95,58 @@ def test_preprocess_matmul_matches_gather_bilinear():
     got = np.einsum("oh,hwc->owc", ry, img)
     got = np.einsum("owc,pw->opc", got, rx)
     np.testing.assert_allclose(got, ref_np, atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("na,nb", [
+    (0, 5), (5, 0), (1, 1), (3, 17), (37, 100), (100, 37), (255, 257),
+])
+def test_merge_sorted_ragged(na, nb):
+    """Host-side generalization: any (even unequal, non-pow2, empty) run
+    lengths pad to the kernel's fixed geometry and slice back."""
+    rng = np.random.RandomState(na * 1000 + nb)
+    a = np.sort(rng.randint(0, 1 << 16, na).astype(np.int32))
+    b = np.sort(rng.randint(0, 1 << 16, nb).astype(np.int32))
+    av = np.arange(na, dtype=np.int32)
+    bv = np.arange(na, na + nb, dtype=np.int32)
+    mk, mv = ops.merge_sorted(jnp.asarray(a), jnp.asarray(av),
+                              jnp.asarray(b), jnp.asarray(bv))
+    mk, mv = np.asarray(mk), np.asarray(mv)
+    assert mk.shape == (na + nb,)
+    np.testing.assert_array_equal(mk, np.sort(np.concatenate([a, b])))
+    # payloads travel with their keys (duplicates: compare as multisets)
+    from collections import Counter
+    ref_pairs = Counter(list(zip(a.tolist(), av.tolist()))
+                        + list(zip(b.tolist(), bv.tolist())))
+    assert Counter(zip(mk.tolist(), mv.tolist())) == ref_pairs
+
+
+def test_merge_sorted_tiled_long_runs(monkeypatch):
+    """Runs longer than MERGE_MAX_RUN go through the merge-path tiler:
+    each output span is produced by one bounded kernel call."""
+    monkeypatch.setattr(ops, "MERGE_MAX_RUN", 64)
+    rng = np.random.RandomState(3)
+    na, nb = 300, 211
+    a = np.sort(rng.randint(0, 1 << 16, na).astype(np.int32))
+    b = np.sort(rng.randint(0, 1 << 16, nb).astype(np.int32))
+    av = np.arange(na, dtype=np.int32)
+    bv = np.arange(na, na + nb, dtype=np.int32)
+    mk, mv = ops.merge_sorted(jnp.asarray(a), jnp.asarray(av),
+                              jnp.asarray(b), jnp.asarray(bv))
+    np.testing.assert_array_equal(np.asarray(mk),
+                                  np.sort(np.concatenate([a, b])))
+    from collections import Counter
+    ref_pairs = Counter(list(zip(a.tolist(), av.tolist()))
+                        + list(zip(b.tolist(), bv.tolist())))
+    assert Counter(zip(np.asarray(mk).tolist(),
+                       np.asarray(mv).tolist())) == ref_pairs
+
+
+def test_merge_sorted_float_keys_with_inf_sentinel():
+    """Float runs pad with +inf: real +inf keys in the data must still
+    come back (slice-by-total, not slice-by-sentinel)."""
+    a = np.array([0.5, 1.5, np.inf], np.float32)
+    b = np.array([1.0], np.float32)
+    mk, _ = ops.merge_sorted(jnp.asarray(a), jnp.arange(3, dtype=jnp.int32),
+                             jnp.asarray(b), jnp.arange(3, 4, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(mk),
+                                  np.array([0.5, 1.0, 1.5, np.inf], np.float32))

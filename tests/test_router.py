@@ -35,7 +35,7 @@ from repro.core import (  # noqa: E402
     TaskOffloader,
     standby_takeover,
 )
-from repro.core.admission import AcceptAll, EwmaGauge, RejectAll  # noqa: E402
+from repro.core.admission import AcceptAll, EwmaGauge  # noqa: E402
 from repro.core.blockdev import BLOCK_SIZE  # noqa: E402
 from repro.core.engine import OffloadEngine  # noqa: E402
 from repro.core.fs import LeaseViolation  # noqa: E402
@@ -514,3 +514,36 @@ if __name__ == "__main__":
         _run_failover_child(sys.argv[2])
     else:  # pragma: no cover - convenience direct run
         sys.exit(pytest.main([__file__, "-q"]))
+
+
+def test_heartbeat_thread_quarantines_dead_target():
+    """start_heartbeat runs probe() on a daemon thread: a killed target is
+    quarantined with NO manual probe calls (the PR-6 follow-up)."""
+    dev, fs, fabric, engines, off, router = build_cluster(
+        3, max_probe_failures=2)
+    with pytest.raises(ValueError):
+        router.start_heartbeat(0.0)
+    router.start_heartbeat(0.01)
+    try:
+        with pytest.raises(RuntimeError):
+            router.start_heartbeat(0.01)  # double start refused
+        fabric.kill("storage2")
+        deadline = time.time() + 5.0
+        while (router.members["storage2"].state != QUARANTINED
+               and time.time() < deadline):
+            time.sleep(0.005)
+        assert router.members["storage2"].state == QUARANTINED
+        assert "storage2" not in off.targets
+        assert router.stats.heartbeats >= 2  # the thread actually beat
+    finally:
+        router.stop_heartbeat()
+    beats = router.stats.heartbeats
+    router.stop_heartbeat()  # idempotent
+    time.sleep(0.05)
+    assert router.stats.heartbeats == beats  # thread really stopped
+    # the plane still serves around the quarantined corpse
+    ext = make_file(fs, "/hb")
+    _, where = router.submit("sum", ext[0].block, 1,
+                             read_extents=ext).result(timeout=30)
+    assert where in ("storage0", "storage1")
+    wait_no_leases(fs)
