@@ -36,6 +36,7 @@ MODULES = [
     "benchmarks.fig18_prep_pipeline",
     "benchmarks.fig19_router_failover",
     "benchmarks.fig20_kv_serving",
+    "benchmarks.fig21_pushdown",
     "benchmarks.roofline_report",
 ]
 
@@ -48,6 +49,7 @@ SMOKE_MODULES = [
     "benchmarks.fig18_prep_pipeline",
     "benchmarks.fig19_router_failover",
     "benchmarks.fig20_kv_serving",
+    "benchmarks.fig21_pushdown",
     "benchmarks.roofline_report",
 ]
 

@@ -29,3 +29,9 @@ from repro.core.admission import (  # noqa: F401
     RejectAll,
     TokenRing,
 )
+from repro.core.pushdown import (  # noqa: F401
+    ProgramError,
+    build_scan,
+    register_pushdown_stub,
+    verify_program,
+)

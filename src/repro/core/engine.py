@@ -127,6 +127,11 @@ class OffloadEngine:
         self.busy_ns = 0  # accumulated simulated work units (DES hook)
         self.tasks_run = 0
         self.wal_segments = 0  # async WAL segments landed near-data
+        # pushdown operator plane telemetry: scans executed, rows walked
+        # vs rows that actually crossed the wire (the selectivity win)
+        self.pushdown_scans = 0
+        self.pushdown_rows_in = 0
+        self.pushdown_rows_out = 0
         # bounded work queue: with many initiators submitting concurrently,
         # admission caps what the policy lets in, and this caps what the
         # engine lets RUN — excess submissions block (backpressure) so the

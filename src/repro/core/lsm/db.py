@@ -31,6 +31,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.blockdev import BLOCK_SIZE
 from repro.core.fs import OffloadFS
+from repro.core import pushdown as P
 from repro.core.lsm import compaction as C
 from repro.core.lsm.manifest import Manifest
 from repro.core.lsm.memtable import TOMBSTONE, MemTable
@@ -123,7 +124,8 @@ class OffloadDB:
         self.cache = TableCache(cfg.table_cache_bytes)
         self._compact_ptr: Dict[int, int] = {}
         self.stats = {"stall_events": 0, "flushes": 0, "compactions": 0,
-                      "wal_bytes": 0, "flush_rpc_payload": 0}
+                      "wal_bytes": 0, "flush_rpc_payload": 0,
+                      "pushdown_scans": 0}
         self.read_stats = {"mem": 0, "imm": 0, "l0": 0, "ln": 0, "absent": 0}
         self.orphans_reclaimed: List[int] = []
         self.rebalancer = None  # attach_rebalancer: drains cold SSTables
@@ -132,6 +134,8 @@ class OffloadDB:
         if register_stubs and offloader is not None:
             offloader.register_local_stub("compact", C.stub_compact)
             offloader.register_local_stub("log_recycle", C.stub_log_recycle)
+            offloader.register_local_stub("pushdown_scan",
+                                          P.stub_pushdown_scan)
 
     # ------------------------------------------------------------ WAL mgmt
     def _make_shipper(self) -> Optional[WalShipper]:
@@ -217,23 +221,195 @@ class OffloadDB:
         total = hits + self.cache.misses
         return hits / total if total else 0.0
 
-    def scan(self, lo: bytes, n: int) -> List[Tuple[bytes, bytes]]:
-        """Range scan: n smallest keys ≥ lo across all sources."""
-        sources: List[Iterable[Tuple[bytes, bytes]]] = []
-        sources.append(((k, v) for k, v, _ in self.mem.items() if k >= lo))
+    def scan(self, lo: bytes = b"", n: Optional[int] = None, *,
+             program: Optional[dict] = None, pushdown: bool = False):
+        """Range scan.  Legacy form ``scan(lo, n)``: the n smallest
+        ``(key, value)`` rows with key ≥ lo, merged across all sources.
+
+        Operator form ``scan(program=prog, pushdown=...)``: ``prog`` is a
+        verified pushdown program (:func:`repro.core.pushdown.build_scan`)
+        carrying its own ``[lo, hi)`` range plus filter / projection /
+        aggregate; ``n`` becomes an optional row limit.  With
+        ``pushdown=True`` the scan plans one sub-scan per stripe whose
+        SSTables overlap the range, ships the *program* to each target
+        through ``TaskOffloader.submit`` (``placement_affinity`` keeps
+        each sub-scan on the stripe that owns its extents), and merges the
+        per-target row streams on-device via ``ops.merge_sorted`` — only
+        matching rows (plus key-only suppression markers, see
+        ``repro.core.pushdown``) cross the wire.  ``pushdown=False``
+        evaluates the same program over initiator block shipping — the
+        differential-testing baseline.  Both paths return identical rows
+        (or the identical aggregate value)."""
+        if program is None:
+            if n is None:
+                raise TypeError("legacy scan(lo, n) requires a row count")
+            sources: List[Iterable[Tuple[bytes, bytes]]] = []
+            sources.append(((k, v) for k, v, _ in self.mem.items() if k >= lo))
+            for entry in reversed(self.imm):
+                sources.append(
+                    ((k, v) for k, v, _ in entry["mem"].items() if k >= lo))
+            for tid in reversed(self.levels[0]):
+                sources.append(self._reader(tid).range_items(lo, None))
+            for lvl in range(1, self.cfg.max_level + 1):
+                its = [self._reader(t).range_items(lo, None)
+                       for t in self.levels[lvl]]
+                sources.append(itertools.chain(*its))
+            out = []
+            for k, v in C._merge(sources, drop_tombstones=True):
+                out.append((k, v))
+                if len(out) >= n:
+                    break
+            return out
+        prog = P.verify_program(program)  # reject before anything ships
+        if pushdown and self.off is not None and self.off.targets:
+            return self._scan_pushdown(prog, n)
+        return self._scan_program_local(prog, n)
+
+    # ------------------------------------------------ pushdown scan plane
+    def _ranked_sources(self, lo: bytes, hi: Optional[bytes]):
+        """All row sources overlapping ``[lo, hi)``, each tagged with a
+        globally unique precedence rank (lower = newer): memtable, then
+        immutable memtables newest→oldest, then L0 tables newest→oldest,
+        then L1..Lmax.  Returns (initiator_sources, storage_tables) as
+        ``[(rank, iterable)]`` and ``[(rank, table_id)]``."""
+        def in_range(k):
+            return k >= lo and (hi is None or k < hi)
+
+        rank = itertools.count()
+        local = [(next(rank),
+                  ((k, v) for k, v, _ in self.mem.items() if in_range(k)))]
         for entry in reversed(self.imm):
-            sources.append(((k, v) for k, v, _ in entry["mem"].items() if k >= lo))
+            local.append((next(rank), ((k, v) for k, v, _
+                                       in entry["mem"].items()
+                                       if in_range(k))))
+        tables = []
         for tid in reversed(self.levels[0]):
-            sources.append(self._reader(tid).range_items(lo, None))
+            tables.append((next(rank), tid))
         for lvl in range(1, self.cfg.max_level + 1):
-            its = [self._reader(t).range_items(lo, None) for t in self.levels[lvl]]
-            sources.append(itertools.chain(*its))
+            for tid in self.levels[lvl]:
+                tables.append((next(rank), tid))
+        pruned = []
+        for r, tid in tables:
+            m = self.tables[tid]
+            if m.max_key < lo or (hi is not None and m.min_key >= hi):
+                continue
+            pruned.append((r, tid))
+        return local, pruned
+
+    def _local_wire_rows(self, prog: dict, local) -> List[tuple]:
+        """Initiator-resident rows (mem + imm) in the stub's wire-row
+        convention: ``(key, rank, payload)`` with ``None`` for
+        tombstone/filtered rows — one deduped key-sorted stream."""
+        best: Dict[bytes, Tuple[int, bytes]] = {}
+        for rnk, src in local:  # rank order: first sighting wins
+            for k, v in src:
+                best.setdefault(k, (rnk, v))
+        agg = prog.get("aggregate")
+        key_only = prog.get("project") == "key"
         out = []
-        for k, v in C._merge(sources, drop_tombstones=True):
-            out.append((k, v))
-            if len(out) >= n:
-                break
+        for k in sorted(best):
+            rnk, v = best[k]
+            if v == TOMBSTONE or not P.eval_filter(prog, k, v):
+                out.append((k, rnk, None))
+            elif agg:
+                out.append((k, rnk, len(v)))
+            else:
+                out.append((k, rnk, b"" if key_only else v))
         return out
+
+    def _scan_program_local(self, prog: dict, limit: Optional[int]):
+        """Block-shipping baseline: every overlapping SSTable is read to
+        the initiator and the program evaluates here."""
+        lo, hi = prog["lo"], prog.get("hi")
+        local, tables = self._ranked_sources(lo, hi)
+        sources = [src for _, src in local]
+        sources += [self._reader(t).range_items(lo, hi) for _, t in tables]
+        agg = prog.get("aggregate")
+        state = P.agg_init(agg) if agg else None
+        out: List[tuple] = []
+        for k, v in C._merge(sources, drop_tombstones=True):
+            if not P.eval_filter(prog, k, v):
+                continue
+            if agg:
+                state = P.agg_add(agg, state, k, len(v))
+            else:
+                out.append(P.project_row(prog, k, v))
+                if limit is not None and len(out) >= limit:
+                    break
+        return state if agg else out
+
+    def _scan_pushdown(self, prog: dict, limit: Optional[int]):
+        """Plan + execute the pushdown scan: one sub-scan per stripe
+        owning overlapping SSTables, submitted with ``reroute=True`` so a
+        dead target's share retries elsewhere or lands locally under the
+        same read lease."""
+        import heapq
+        lo, hi = prog["lo"], prog.get("hi")
+        local, tables = self._ranked_sources(lo, hi)
+        lstream = self._local_wire_rows(prog, local)
+        groups: Dict[int, dict] = {}
+        for rnk, tid in tables:
+            m = self.tables[tid]
+            ino = self.fs.stat(m.path)
+            shard = (self.fs.shard_of_extents(ino.extents)
+                     if self.fs.shards > 1 else None)
+            g = groups.setdefault(-1 if shard is None else shard,
+                                  {"tables": [], "extents": [], "mtime": 0.0})
+            g["tables"].append({
+                "runs": [(e.block, e.nblocks) for e in ino.extents],
+                "size": ino.size, "rank": rnk,
+            })
+            g["extents"].extend(ino.extents)
+            g["mtime"] = max(g["mtime"], ino.mtime)
+        agg = prog.get("aggregate")
+        # single-stripe aggregate with no initiator-resident rows: the
+        # sub-scan provably covers the whole range, so the target can
+        # aggregate fully and ship ONLY the aggregate state
+        final = bool(agg) and not lstream and len(groups) == 1
+        specs = [{
+            "task": "pushdown_scan",
+            "args": (g["tables"], prog),
+            "kwargs": {"final": final},
+            "read_extents": g["extents"],
+            "mtime": g["mtime"],
+            "reroute": True,
+        } for _, g in sorted(groups.items())]
+        self.stats["pushdown_scans"] += 1
+        results = self.off.submit(specs) if specs else []
+        streams = [lstream] if lstream else []
+        agg_states = []
+        for res, _where in results:
+            if res[0] == "agg":
+                agg_states.append(res[1])
+                continue
+            _, matched, marker_blob, _scanned = res
+            markers = [(k, rnk, None)
+                       for k, rnk in P.unpack_markers(marker_blob)]
+            streams.append(list(heapq.merge(matched, markers,
+                                            key=lambda r: r[0])))
+        if final:
+            state = P.agg_init(agg)
+            for s in agg_states:
+                state = P.agg_merge(agg, state, s)
+            return state
+        winners = P.merge_row_streams(streams)
+        state = P.agg_init(agg) if agg else None
+        proj = prog.get("project")
+        out: List[tuple] = []
+        for k, rnk, payload in winners:
+            if payload is None:  # tombstone or filtered-out winner
+                continue
+            if agg:
+                state = P.agg_add(agg, state, k, payload)
+            elif proj == "key":
+                out.append(k)
+            elif proj == "value":
+                out.append(payload)
+            else:
+                out.append((k, payload))
+            if not agg and limit is not None and len(out) >= limit:
+                break
+        return state if agg else out
 
     def _reader(self, tid: int, *, for_compaction: bool = False) -> SSTableReader:
         use_cache = self.cfg.cache_compaction_reads or not for_compaction
@@ -733,7 +909,8 @@ class OffloadDB:
         db.cache = TableCache(cfg.table_cache_bytes)
         db._compact_ptr = {}
         db.stats = {"stall_events": 0, "flushes": 0, "compactions": 0,
-                    "wal_bytes": 0, "flush_rpc_payload": 0}
+                    "wal_bytes": 0, "flush_rpc_payload": 0,
+                    "pushdown_scans": 0}
         db.read_stats = {"mem": 0, "imm": 0, "l0": 0, "ln": 0, "absent": 0}
         db.rebalancer = None
         live_logs: Dict[int, str] = {}
@@ -797,4 +974,5 @@ class OffloadDB:
         if db.off is not None:
             db.off.register_local_stub("compact", C.stub_compact)
             db.off.register_local_stub("log_recycle", C.stub_log_recycle)
+            db.off.register_local_stub("pushdown_scan", P.stub_pushdown_scan)
         return db

@@ -42,6 +42,7 @@ task, one coalesced wire message — ``coalesce=False`` keeps the legacy
 from __future__ import annotations
 
 import threading
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -341,7 +342,7 @@ class TaskOffloader:
                     "stream/async_/reroute apply to spec submission; the "
                     "legacy submit(task, *args) form takes none of them"
                 )
-            return self.submit_task(task_or_specs, *args, **kwargs)
+            return self._submit_task(task_or_specs, *args, **kwargs)
         if args or kwargs:
             raise TypeError("spec submission takes no extra args/kwargs")
         single = isinstance(task_or_specs, dict)
@@ -370,6 +371,22 @@ class TaskOffloader:
         self,
         task: str,
         *args,
+        **kwargs,
+    ):
+        """Deprecated shim (pre-consolidation API, kept so existing callers
+        run unchanged — use :meth:`submit`): offload one `task` to `target`
+        (default: load-balanced pick) and block. Returns (result,
+        where_ran). The initiator quiesces on the leased write set for the
+        duration (no DLM — lease discipline instead)."""
+        warnings.warn(
+            "TaskOffloader.submit_task is deprecated; use "
+            "TaskOffloader.submit", DeprecationWarning, stacklevel=2)
+        return self._submit_task(task, *args, **kwargs)
+
+    def _submit_task(
+        self,
+        task: str,
+        *args,
         read_extents: Sequence[Extent] = (),
         write_extents: Sequence[Extent] = (),
         target: Optional[str] = None,
@@ -378,11 +395,6 @@ class TaskOffloader:
         coalesce: Optional[bool] = None,
         **kwargs,
     ):
-        """Deprecated shim (pre-consolidation API, kept so existing callers
-        run unchanged — use :meth:`submit`): offload one `task` to `target`
-        (default: load-balanced pick) and block. Returns (result,
-        where_ran). The initiator quiesces on the leased write set for the
-        duration (no DLM — lease discipline instead)."""
         coalesce = self.coalesce if coalesce is None else coalesce
         dst = target or self._route(read_extents, write_extents)
         lease = self.fs.grant_lease(read_extents, write_extents)
@@ -426,11 +438,6 @@ class TaskOffloader:
         self,
         task: str,
         *args,
-        read_extents: Sequence[Extent] = (),
-        write_extents: Sequence[Extent] = (),
-        target: Optional[str] = None,
-        mtime: float = 0.0,
-        bypass_cache: bool = False,
         **kwargs,
     ) -> OffloadFuture:
         """Deprecated shim (use ``submit(spec, async_=True)``): non-blocking
@@ -439,6 +446,23 @@ class TaskOffloader:
         rejected-task fallback runs at resolution. Always a single
         coalesced wire message — async submission has no legacy-handshake
         form, so ``coalesce=False`` offloaders still coalesce here."""
+        warnings.warn(
+            "TaskOffloader.submit_async is deprecated; use "
+            "TaskOffloader.submit(spec, async_=True)",
+            DeprecationWarning, stacklevel=2)
+        return self._submit_async(task, *args, **kwargs)
+
+    def _submit_async(
+        self,
+        task: str,
+        *args,
+        read_extents: Sequence[Extent] = (),
+        write_extents: Sequence[Extent] = (),
+        target: Optional[str] = None,
+        mtime: float = 0.0,
+        bypass_cache: bool = False,
+        **kwargs,
+    ) -> OffloadFuture:
         dst = target or self._route(read_extents, write_extents)
         lease = self.fs.grant_lease(read_extents, write_extents)
         nb = self._lease_blocks(lease)
@@ -501,6 +525,9 @@ class TaskOffloader:
         (with the exception), not the whole batch. A streamed spec with
         ``reroute=True`` retries admission pushback once on the
         least-loaded other target before falling back local."""
+        warnings.warn(
+            "TaskOffloader.submit_many is deprecated; use "
+            "TaskOffloader.submit(specs)", DeprecationWarning, stacklevel=2)
         if stream:
             return self._submit_many_stream(specs)
         if not specs:
@@ -852,6 +879,9 @@ def serve_engine(engine: OffloadEngine, fabric: RpcFabric, policy,
             "completed": engine.queue.completed,
             "tasks_run": engine.tasks_run,
             "wal_segments": engine.wal_segments,
+            "pushdown_scans": engine.pushdown_scans,
+            "pushdown_rows_in": engine.pushdown_rows_in,
+            "pushdown_rows_out": engine.pushdown_rows_out,
         }
 
     fabric.register(n, "admit", admit)

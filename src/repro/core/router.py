@@ -14,9 +14,11 @@ disaggregated storage:
     stops answering decays toward "unknown" (``EwmaGauge.aged_value``)
     and is quarantined after ``stale_after`` seconds of silence rather
     than staying frozen at its last — possibly flattering — reading;
-  * **priority** — ``background`` work (compaction, prep) queues behind
+  * **priority** — three I/O classes: ``background`` work (compaction,
+    prep) and ``pushdown`` work (scan operator shares) queue behind
     ``foreground`` work (WAL, flush) once fleet pressure crosses
-    ``overload_threshold``; callers can opt into shedding instead;
+    ``overload_threshold``, with pushdown draining strictly before
+    background; callers can opt into shedding instead;
   * **cancellation** — a queued request dies in the queue; an in-flight
     request has its write lease revoked THROUGH THE JOURNAL immediately,
     so the target's late writes are fenced by ``OffloadFS._live_lease``
@@ -42,7 +44,7 @@ from repro.core.blockdev import BlockDevice
 from repro.core.fs import OffloadFS
 from repro.core.offloader import OffloadFuture, TaskOffloader
 
-PRIORITIES = ("foreground", "background")
+PRIORITIES = ("foreground", "pushdown", "background")
 
 # membership states
 LIVE = "live"
@@ -377,13 +379,17 @@ class ClusterRouter:
             "mtime": mtime, "bypass_cache": bypass_cache,
         }
         req = OffloadRequest(self, spec, priority)
-        if priority == "background" and self.overloaded():
+        # the I/O-class ladder: foreground always dispatches; pushdown
+        # (scan operator shares — latency-tolerant but user-visible) and
+        # background (compaction, prep) queue under overload, and pump()
+        # drains pushdown strictly before background
+        if priority != "foreground" and self.overloaded():
             with self._lock:
                 if shed or len(self._queue) >= self.max_queued:
                     self.stats.shed += 1
                     req.future.set_exception(OverloadShed(
                         f"fleet pressure {self.fleet_pressure():.1f} >= "
-                        f"{self.overload_threshold} (background shed)"))
+                        f"{self.overload_threshold} ({priority} shed)"))
                     return req
                 self._queue.append(req)
                 self.stats.queued += 1
@@ -400,7 +406,12 @@ class ClusterRouter:
             with self._lock:
                 if not self._queue or self.overloaded():
                     return released
-                req = self._queue.pop(0)
+                # highest class first (pushdown before background),
+                # FIFO within a class
+                i = min(range(len(self._queue)),
+                        key=lambda j: (PRIORITIES.index(
+                            self._queue[j].priority), j))
+                req = self._queue.pop(i)
             if req.cancelled:
                 continue
             self._dispatch(req)
@@ -412,13 +423,13 @@ class ClusterRouter:
             self.stats.dispatched[req.priority] = \
                 self.stats.dispatched.get(req.priority, 0) + 1
         try:
-            inner = self.off.submit_async(
-                s["task"], *s["args"],
-                read_extents=s["read_extents"],
-                write_extents=s["write_extents"],
-                mtime=s["mtime"], bypass_cache=s["bypass_cache"],
-                **s["kwargs"],
-            )
+            inner = self.off.submit({
+                "task": s["task"], "args": s["args"],
+                "kwargs": s["kwargs"],
+                "read_extents": s["read_extents"],
+                "write_extents": s["write_extents"],
+                "mtime": s["mtime"], "bypass_cache": s["bypass_cache"],
+            }, async_=True)
         except LookupError:  # no targets at all: run on the initiator
             try:
                 lease = self.fs.grant_lease(s["read_extents"],

@@ -144,13 +144,13 @@ class OffloadPrep:
         n = len(paths)
         remote, local_ids = self.plan_shares(n)
         out: List[Optional[np.ndarray]] = [None] * n
-        # remote shares: one submit_many round — one wire batch per target,
+        # remote shares: one submit round — one wire batch per target,
         # targets served concurrently (instead of serial per-target calls)
         specs = [self.share_spec(t, ids, paths, epoch_seed=epoch_seed)
                  for t, ids in remote]
         if specs:
             for (target, ids), (tensors, where) in zip(
-                    remote, self.off.submit_many(specs)):
+                    remote, self.off.submit(specs)):
                 self.note_remote_outcome(len(ids), target, where)
                 for i, t in zip(ids, tensors):
                     out[i] = t

@@ -202,6 +202,35 @@ class Cluster:
             if rate and remaining > 0:
                 yield ("delay", c / rate)
 
+    def pushdown_scan(self, initiator: int, table_bytes: float,
+                      selectivity: float, *, target: int = 0,
+                      row_bytes: float = 256.0, key_bytes: float = 32.0,
+                      pushdown: bool = True):
+        """One stripe's share of an OffloadDB range scan (PR 8).
+
+        Block shipping (``pushdown=False``): every SSTable byte crosses
+        the PoseidonOS reactors + both link FIFOs and the *initiator*
+        cores pay the merge+filter at ``merge_rate``.  Pushdown: the
+        storage node reads the same bytes SPDK-direct (no posvol
+        crossing, like the other near-data stubs), its own cores run the
+        verified operator program, and only matching rows plus key-only
+        suppression markers cross the wire — bytes drop by roughly the
+        selectivity factor.  One small RPC ships the program + lease."""
+        yield from self.rpc(initiator, 2048, target=target)
+        if not pushdown:
+            yield from self.storage_read(initiator, table_bytes,
+                                         target=target)
+            yield ("use", self.cpu_i[initiator],
+                   table_bytes / self.spec.merge_rate)
+            return
+        yield ("use", self.nvme_r_t[target], table_bytes)
+        yield ("use", self.cpu_s_t[target],
+               table_bytes / self.spec.merge_rate)
+        n_rows = table_bytes / row_bytes
+        wire = selectivity * table_bytes + (1.0 - selectivity) * n_rows * key_bytes
+        yield from self.net_transfer(initiator, wire, target=target)
+        yield ("use", self.cpu_i[initiator], wire / self.spec.merge_rate)
+
     def train_consume(self, initiator: int, n_images: float):
         """The trainer sinks one prepped minibatch (strictly FIFO: the
         1-server trainer resource serializes batches in arrival order)."""

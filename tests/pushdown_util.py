@@ -1,0 +1,194 @@
+"""Shared generators for the pushdown differential/fuzz harness.
+
+Two harnesses drive these with a plain ``random.Random`` so they share
+one corpus/program space:
+
+  * tests/test_property.py — hypothesis supplies the seeds (primary),
+  * tests/test_invariants_fallback.py — fixed seeds (the safety net when
+    the container ships without hypothesis).
+
+The oracle is a plain dict: every generated op is applied to the model
+and to the OffloadDB, then random verified programs run through BOTH scan
+paths — initiator block shipping and multi-target pushdown — and each
+must match the model exactly, rows and aggregates alike.
+"""
+from repro.core import pushdown as P
+from repro.core.admission import AcceptAll
+from repro.core.blockdev import BlockDevice
+from repro.core.engine import OffloadEngine
+from repro.core.fs import OffloadFS
+from repro.core.lsm import compaction as C
+from repro.core.lsm.db import DBConfig, OffloadDB
+from repro.core.offloader import TaskOffloader, serve_engine
+from repro.core.rpc import RpcFabric
+
+TAGS = (b"A", b"B", b"C", b"D")
+KEYSPACE = 48  # small enough that overwrites/deletes collide often
+
+
+def build_plane(n_targets=2, *, fabric=None):
+    """A striped n-target pushdown plane.  L0 tables stay materialized on
+    rotating stripes (no compaction) — same shape as
+    benchmarks/fig21_pushdown.py, so sub-scans really fan out."""
+    dev = BlockDevice(num_blocks=1 << 14)
+    fs = OffloadFS(dev, node="init0", shards=n_targets)
+    fabric = fabric or RpcFabric()
+    engines = []
+    for t in range(n_targets):
+        eng = OffloadEngine(fs, node=f"storage{t}")
+        eng.register_stub("compact", C.stub_compact)
+        eng.register_stub("log_recycle", C.stub_log_recycle)
+        P.register_pushdown_stub(eng)
+        serve_engine(eng, fabric, AcceptAll())
+        engines.append(eng)
+    off = TaskOffloader(fs, fabric, node="init0",
+                        targets=[e.node for e in engines],
+                        lb_policy="placement_affinity")
+    db = OffloadDB(fs, off, DBConfig(memtable_bytes=4 * 1024,
+                                     log_recycling=False, l0_cache=False,
+                                     l0_trigger=999))
+    return fs, fabric, engines, db
+
+
+def rand_key(rng):
+    return f"k{rng.randrange(KEYSPACE):04d}".encode()
+
+
+def random_corpus(rng, db, model, n_ops=120):
+    """Random put/delete/flush stream applied to the DB and the model."""
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.72:
+            k = rand_key(rng)
+            v = rng.choice(TAGS) + rng.randbytes(rng.randrange(0, 96))
+            db.put(k, v)
+            model[k] = v
+        elif r < 0.88:
+            k = rand_key(rng)
+            db.delete(k)
+            model.pop(k, None)
+        else:
+            db.flush_all()  # seal → L0 table on the next stripe
+    if rng.random() < 0.5:  # half the time the tail stays in the memtable
+        db.flush_all()
+
+
+def random_filter(rng, depth=0):
+    if depth >= 2 or rng.random() < 0.4:  # leaf predicate
+        c = rng.randrange(5)
+        if c == 0:
+            return P.prefix(P.value(), rng.choice(TAGS))
+        if c == 1:
+            return P.contains(P.key(), str(rng.randrange(10)).encode())
+        if c == 2:
+            return P.cmp(rng.choice(P.CMP_OPS), P.length(P.value()),
+                         P.lit(rng.randrange(1, 100)))
+        if c == 3:
+            return P.cmp(rng.choice(P.CMP_OPS), P.key(),
+                         P.lit(rand_key(rng)))
+        return P.prefix(P.key(), b"k00")
+    c = rng.randrange(3)
+    if c == 0:
+        return P.not_(random_filter(rng, depth + 1))
+    combine = P.and_ if c == 1 else P.or_
+    return combine(*[random_filter(rng, depth + 1)
+                     for _ in range(rng.randrange(2, 4))])
+
+
+def random_program(rng):
+    lo = b"" if rng.random() < 0.3 else rand_key(rng)
+    hi = None if rng.random() < 0.3 else rand_key(rng)
+    if hi is not None and hi < lo:
+        lo, hi = hi, lo
+    where = None if rng.random() < 0.15 else random_filter(rng)
+    kw = {}
+    r = rng.random()
+    if r < 0.25:
+        kw["aggregate"] = rng.choice(P.AGGREGATES)
+    elif r < 0.5:
+        kw["project"] = rng.choice(P.PROJECTIONS)
+    return P.build_scan(lo, hi, where=where, **kw)
+
+
+def reference(model, prog):
+    """Evaluate a program against the dict model — the independent oracle
+    both scan paths must reproduce exactly."""
+    lo, hi = prog["lo"], prog.get("hi")
+    agg = prog.get("aggregate")
+    state = P.agg_init(agg) if agg else None
+    out = []
+    for k in sorted(model):
+        if k < lo or (hi is not None and k >= hi):
+            continue
+        v = model[k]
+        if not P.eval_filter(prog, k, v):
+            continue
+        if agg:
+            state = P.agg_add(agg, state, k, len(v))
+        else:
+            out.append(P.project_row(prog, k, v))
+    return state if agg else out
+
+
+def differential_round(rng, n_programs=6):
+    """One full differential round: random plane + corpus, then
+    ``n_programs`` random programs through model / local / pushdown."""
+    fs, fabric, engines, db = build_plane(rng.choice((1, 2, 3)))
+    model = {}
+    random_corpus(rng, db, model)
+    for _ in range(n_programs):
+        prog = random_program(rng)
+        expect = reference(model, prog)
+        assert db.scan(program=prog, pushdown=False) == expect
+        assert db.scan(program=prog, pushdown=True) == expect
+    assert not fs._leases  # every sub-scan's read lease released
+
+
+# ------------------------------------------------------- verifier fuzz
+def random_junk(rng, depth=0):
+    """Arbitrary (mostly malformed) program material."""
+    r = rng.random()
+    if depth >= 4 or r < 0.35:
+        return rng.choice([
+            0, 1, -1, 2 ** 40, b"", b"x" * rng.choice((1, 8, 2000)),
+            "str", None, True, False, 3.14, (),
+            ("key",), ("value",), ("lit", rng.randrange(100)), ("lit", b"y"),
+            ("bogus",),
+        ])
+    if r < 0.55:
+        return tuple(random_junk(rng, depth + 1)
+                     for _ in range(rng.randrange(0, 4)))
+    ops = ("lit", "len", "cmp", "and", "or", "not", "prefix", "contains",
+           "key", "value", "eval", "__import__")
+    return (rng.choice(ops),) + tuple(
+        random_junk(rng, depth + 1) for _ in range(rng.randrange(0, 4)))
+
+
+def fuzz_verifier_round(rng, n=60):
+    """The totality property: on arbitrary junk ``verify_program`` either
+    accepts or raises ProgramError — never crashes, never hangs — and
+    anything it accepts is safely evaluable."""
+    for _ in range(n):
+        if rng.random() < 0.2:
+            prog = random_junk(rng)
+        else:
+            prog = {
+                "v": rng.choice((1, 1, 1, 2, b"1", None)),
+                "lo": rng.choice((b"", b"k", "k", 5, None)),
+                "hi": rng.choice((None, b"z", b"", 7, "z")),
+                "filter": rng.choice((None, random_junk(rng))),
+                "project": rng.choice((None, "row", "key", "value",
+                                       "rows", b"key", 3)),
+                "aggregate": rng.choice((None, None, "count", "sum",
+                                         "bytes", b"count")),
+            }
+            if rng.random() < 0.1:
+                prog["extra"] = 1
+        try:
+            out = P.verify_program(prog)
+        except P.ProgramError:
+            continue
+        assert out is prog  # accepted programs pass through unchanged
+        P.eval_filter(out, b"k0001", b"Avvvv")  # accepted ⇒ evaluable
+        if not out.get("aggregate"):
+            P.project_row(out, b"k0001", b"Avvvv")

@@ -287,7 +287,8 @@ def test_router_schedule_never_leaks_leases(seed):
             reqs.append(router.submit(
                 "fill", ext[0].block, 1, rng.randrange(2, 255),
                 write_extents=ext,
-                priority=rng.choice(("foreground", "background"))))
+                priority=rng.choice(("foreground", "pushdown",
+                                     "background"))))
         elif op < 0.55 and reqs:
             rng.choice(reqs).cancel()
         elif op < 0.65:
@@ -329,3 +330,24 @@ def test_router_schedule_never_leaks_leases(seed):
     assert not fs2.orphan_leases() and not fs2._leases
     assert fs2.lease_journal.replay() == {}  # journal fully compacted
     fs2.write("/crash0", b"\x03" * BLOCK_SIZE, 0)  # blocks writable again
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_pushdown_differential_matches_model(seed):
+    """Fixed-seed mirror of test_property.py::
+    test_pushdown_differential_matches_model — random corpus + random
+    verified program: pushdown ≡ block shipping ≡ dict model, rows and
+    aggregates, no leaked lease."""
+    from pushdown_util import differential_round
+
+    differential_round(random.Random(seed))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_pushdown_verifier_total_on_junk(seed):
+    """Fixed-seed mirror of test_property.py::
+    test_pushdown_verifier_total_on_junk — junk programs either verify
+    (and evaluate safely) or raise ProgramError, nothing else."""
+    from pushdown_util import fuzz_verifier_round
+
+    fuzz_verifier_round(random.Random(seed))

@@ -52,7 +52,7 @@ def test_submit_many_stream_resolves_per_share():
     assert local_ids == [4, 5, 6, 7]
     specs = [prep.share_spec(t, ids, paths, epoch_seed=1)
              for t, ids in remote]
-    futs = off.submit_many(specs, stream=True)
+    futs = off.submit(specs, stream=True)
     assert len(futs) == len(specs)
     for (target, ids), fut in zip(remote, futs):
         tensors, where = fut.result(timeout=30)
@@ -61,16 +61,16 @@ def test_submit_many_stream_resolves_per_share():
     assert not fs._leases  # all released at resolution
 
 
-def test_submit_many_stream_empty_and_legacy_plane():
+def test_submit_stream_empty_and_legacy_plane():
     dev, fs, fabric, engines, off = build_plane(1)
-    assert off.submit_many([], stream=True) == []
+    assert off.submit([], stream=True) == []
     # legacy (coalesce=False) plane still resolves futures
     off2 = TaskOffloader(fs, fabric, node="init0", coalesce=False,
                          targets=[engines[0].node])
     prep = OffloadPrep(fs, off2, out_size=16, offload_ratio=0.5)
     paths = prep.materialize_corpus(4, max_side=64)
     remote, _ = prep.plan_shares(len(paths))
-    futs = off2.submit_many(
+    futs = off2.submit(
         [prep.share_spec(t, ids, paths) for t, ids in remote], stream=True)
     for fut in futs:
         tensors, where = fut.result(timeout=30)
@@ -220,7 +220,7 @@ def test_reroute_wire_error_falls_back_local_and_counts_ran_local():
     remote, _ = prep.plan_shares(len(paths))
     specs = [prep.share_spec("storage0", ids, paths, reroute=True)
              for t, ids in remote]
-    for fut in off.submit_many(specs, stream=True):
+    for fut in off.submit(specs, stream=True):
         tensors, where = fut.result(timeout=30)
         assert where == off.node  # completed on the initiator
     assert off.stats.rerouted == len(specs)
@@ -236,7 +236,7 @@ def _run_shares(off, prep, paths, *, reroute=True):
     specs = [prep.share_spec(t, ids, paths, epoch_seed=1, reroute=reroute)
              for t, ids in remote]
     tensors, wheres = [], []
-    for fut in off.submit_many(specs, stream=True):
+    for fut in off.submit(specs, stream=True):
         t, where = fut.result(timeout=30)
         tensors.append(t)
         wheres.append(where)
@@ -282,7 +282,7 @@ def test_stream_target_death_mid_batch_at_least_once_exactly_one_landing():
         specs = [prep.share_spec(t, [i], paths, epoch_seed=1, reroute=True)
                  for t, ids in remote for i in ids]
         tensors, wheres = [], []
-        for fut in off.submit_many(specs, stream=True):
+        for fut in off.submit(specs, stream=True):
             t, where = fut.result(timeout=30)
             tensors.append(t)
             wheres.append(where)
@@ -320,7 +320,7 @@ def test_stream_death_without_reroute_surfaces_error_and_releases_lease():
     remote, _ = prep.plan_shares(len(paths))
     specs = [prep.share_spec(t, ids, paths, epoch_seed=1)
              for t, ids in remote]
-    futs = off.submit_many(specs, stream=True)
+    futs = off.submit(specs, stream=True)
     outcomes = {"ok": 0, "error": 0}
     for (t, _), fut in zip(remote, futs):
         try:

@@ -70,7 +70,8 @@ def run_router_schedule(rng):
             reqs.append(router.submit(
                 "fill", ext[0].block, 1, rng.randrange(2, 255),
                 write_extents=ext,
-                priority=rng.choice(("foreground", "background"))))
+                priority=rng.choice(("foreground", "pushdown",
+                                     "background"))))
         elif op < 0.55 and reqs:
             rng.choice(reqs).cancel()
         elif op < 0.65:
@@ -118,6 +119,30 @@ def run_router_schedule(rng):
 @given(st.integers(0, 2**31 - 1))
 def test_router_schedule_never_leaks_leases(seed):
     run_router_schedule(random.Random(seed))
+
+
+# ------------------------------------ pushdown differential invariant
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pushdown_differential_matches_model(seed):
+    """THE pushdown invariant (DESIGN.md §9, PR 8): on a random corpus
+    (random puts/deletes/flushes across random stripe counts) a random
+    verified program returns IDENTICAL rows and aggregates through the
+    pushdown plane, the block-shipping baseline, and the dict model —
+    and leaks no lease."""
+    from pushdown_util import differential_round
+
+    differential_round(random.Random(seed))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pushdown_verifier_total_on_junk(seed):
+    """Fuzzing the verifier: arbitrary junk either verifies (and is then
+    safely evaluable) or raises ProgramError — never a crash or hang."""
+    from pushdown_util import fuzz_verifier_round
+
+    fuzz_verifier_round(random.Random(seed))
 
 
 # ------------------------------------------------------------ extents

@@ -164,7 +164,7 @@ def test_target_death_mid_submit_many_loses_no_task_leaks_no_lease():
               "write_extents": e, "target": f"storage{i % 4}",
               "reroute": True}
              for i, e in enumerate(exts)]
-    futs = off.submit_many(specs, stream=True)
+    futs = off.submit(specs, stream=True)
     wheres = [f.result(timeout=30)[1] for f in futs]
     assert fabric.injected["dead"] > 0
     assert wheres[1] != "storage1" and wheres[5] != "storage1"  # rerouted
@@ -547,3 +547,92 @@ def test_heartbeat_thread_quarantines_dead_target():
                              read_extents=ext).result(timeout=30)
     assert where in ("storage0", "storage1")
     wait_no_leases(fs)
+
+
+# ------------------------------------------------------ pushdown plane
+def test_pushdown_scan_survives_target_death_mid_scan():
+    """A target dies while its pushdown sub-scan is in flight: the share
+    reroutes (other target, then local) under the ORIGINAL read lease and
+    the scan returns byte-identical rows — zero leaked leases."""
+    from pushdown_util import build_plane
+    from repro.core import pushdown as P
+
+    fabric = FaultyFabric(seed=7)
+    fs, fabric, engines, db = build_plane(3, fabric=fabric)
+    for i in range(90):
+        tag = b"A" if i % 4 == 0 else b"B"
+        db.put(f"k{i:04d}".encode(), tag + bytes(20 + i % 7))
+        if i % 30 == 29:
+            db.flush_all()  # three tables, rotating stripes
+    prog = P.build_scan(where=P.prefix(P.value(), b"A"))
+    expect = db.scan(program=prog, pushdown=False)
+    assert len(expect) == 23
+    fabric.kill_after("storage1", 0)  # dies at delivery of its sub-scan
+    assert db.scan(program=prog, pushdown=True) == expect
+    wait_no_leases(fs)
+    fabric.kill("storage0")  # a second target fully dead: retries refused
+    assert db.scan(program=prog, pushdown=True) == expect
+    wait_no_leases(fs)
+    # and the degenerate fleet: every target dead → every share local
+    fabric.kill("storage2")
+    assert db.scan(program=prog, pushdown=True) == expect
+    wait_no_leases(fs)
+    # an aggregate through the same wreckage
+    agg = P.build_scan(where=P.prefix(P.value(), b"A"), aggregate="count")
+    assert db.scan(program=agg, pushdown=True) == 23
+    wait_no_leases(fs)
+
+
+def test_pushdown_priority_queues_under_overload_drains_before_background():
+    """The third I/O class: pushdown queues under overload (it is not
+    foreground), but pump() drains it strictly before background."""
+    order = []
+
+    def stub_mark(io, tag):
+        order.append(tag)
+        return tag
+
+    dev = BlockDevice(num_blocks=1 << 12)
+    fs = OffloadFS(dev, node="init0")
+    # ONE rpc worker: execution order == dispatch order, so the drain
+    # order is observable through the stub
+    fabric = FaultyFabric(seed=0, workers=1)
+    eng = OffloadEngine(fs, node="storage0", enable_cache=False)
+    eng.register_stub("mark", stub_mark)
+    serve_engine(eng, fabric, AcceptAll())
+    off = TaskOffloader(fs, fabric, node="init0", targets=["storage0"])
+    off.register_local_stub("mark", stub_mark)
+    pressure = [10.0]
+    router = ClusterRouter(off, overload_threshold=1.0,
+                           pressure_fn=lambda: pressure[0])
+    with pytest.raises(ValueError):
+        router.submit("mark", "x", priority="bulk")
+    bg = router.submit("mark", "bg", priority="background")
+    pd = router.submit("mark", "pd", priority="pushdown")
+    assert not bg.done() and not pd.done()  # both classes held back
+    assert router.stats.queued == 2
+    assert not fs._leases  # queued work quiesces nothing
+    fg = router.submit("mark", "fg", priority="foreground")
+    fg.result(timeout=30)
+    assert not pd.done()  # pushdown is latency-tolerant: still queued
+    pressure[0] = 0.0
+    assert router.pump() == 2
+    pd.result(timeout=30)
+    bg.result(timeout=30)
+    assert order == ["fg", "pd", "bg"]  # class ladder, FIFO within class
+    wait_no_leases(fs)
+
+
+def test_pushdown_shed_under_pressure_when_requested():
+    """A pushdown share with shed=True prefers failure to waiting, same
+    as background — the scan planner can then degrade to block shipping."""
+    pressure = [10.0]
+    dev, fs, fabric, engines, off, router = build_cluster(
+        1, overload_threshold=1.0, pressure_fn=lambda: pressure[0])
+    ext = make_file(fs, "/p")
+    req = router.submit("sum", ext[0].block, 1, read_extents=ext,
+                        priority="pushdown", shed=True)
+    with pytest.raises(OverloadShed, match="pushdown shed"):
+        req.result(timeout=5)
+    assert router.stats.shed == 1
+    assert not fs._leases
