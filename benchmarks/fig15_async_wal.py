@@ -146,6 +146,7 @@ def part_c():
     # a submit_many-style write lease still outstanding at crash time
     fs.create("/orphaned-output")
     fs.fallocate("/orphaned-output", 64 * 1024)
+    # reprolint: allow[lease-raw] deliberate orphan: crash-recovery bench needs a never-released grant
     fs.grant_lease((), fs.stat("/orphaned-output").extents)
     fabric.drain()
 

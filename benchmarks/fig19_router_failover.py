@@ -188,6 +188,7 @@ def takeover(n_files: int) -> None:
         byte_map[p] = bytes([i % 251 + 1]) * BLOCK_SIZE
         fs.write(p, byte_map[p], 0)
     fs.flush_metadata()
+    # reprolint: allow[lease-raw] deliberate orphans: failover bench measures takeover fencing
     orphans = [fs.grant_lease([], [fs.stat(f"/data/f{i}").extents[0]])
                for i in range(min(4, n_files))]
     # initiator dies here: leases journaled but never released

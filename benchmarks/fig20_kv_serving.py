@@ -154,7 +154,10 @@ def placement_hit_rates(smoke: bool) -> None:
     n_families = 6 if smoke else 24
     cache = {"kv": jnp.arange(4096, dtype=jnp.float32)}
 
-    def zipf_family(i: int, state=[7]) -> int:
+    zipf_state = [7]  # xorshift PRNG word, advanced per call
+
+    def zipf_family(i: int) -> int:
+        state = zipf_state
         x = state[0]
         x ^= (x << 13) & 0xFFFFFFFF
         x ^= x >> 17

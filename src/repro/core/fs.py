@@ -527,6 +527,20 @@ class OffloadFS:
                     keep.append(Extent(e.file_offset, e.block, cut, e.shard))
                     drop.append(Extent(e.file_offset + cut, e.block + cut,
                                        e.nblocks - cut, e.shard))
+            drop_blocks = {
+                b for e in drop for b in range(e.block, e.block + e.nblocks)
+            }
+            self._check_not_leased(drop_blocks)  # write leases
+            for other in self._leases.values():
+                held = other.read_blocks & drop_blocks
+                if held:
+                    # freeing + trimming under an active reader would
+                    # corrupt its input (same hazard rename/migrate fence)
+                    raise LeaseViolation(
+                        f"block {min(held)} read-leased to task "
+                        f"{other.task_id}: truncate would free it under "
+                        "the reader"
+                    )
             self.extmgr.free(drop)
             for e in drop:
                 # trim like delete() does: freed blocks must read as zeros,
@@ -755,6 +769,7 @@ class OffloadFS:
             inode.mtime = self._tick()
             if not lease:
                 return runs
+            # reprolint: allow[lease-raw] lease intentionally escapes to the caller, who owns release
             grant = self.grant_lease(
                 (), [Extent(0, blk, n) for blk, n in runs]
             )

@@ -110,7 +110,9 @@ class TableCache:
 
 class OffloadDB:
     def __init__(self, fs: OffloadFS, offloader: Optional[TaskOffloader],
-                 cfg: DBConfig = DBConfig(), *, register_stubs: bool = True):
+                 cfg: Optional[DBConfig] = None, *,
+                 register_stubs: bool = True):
+        cfg = cfg if cfg is not None else DBConfig()
         self.fs = fs
         self.off = offloader
         self.cfg = cfg
@@ -396,7 +398,7 @@ class OffloadDB:
         state = P.agg_init(agg) if agg else None
         proj = prog.get("project")
         out: List[tuple] = []
-        for k, rnk, payload in winners:
+        for k, _rnk, payload in winners:
             if payload is None:  # tombstone or filtered-out winner
                 continue
             if agg:
@@ -887,7 +889,8 @@ class OffloadDB:
         self.manifest.commit()
 
     @classmethod
-    def recover(cls, fs: OffloadFS, offloader=None, cfg: DBConfig = DBConfig()):
+    def recover(cls, fs: OffloadFS, offloader=None,
+                cfg: Optional[DBConfig] = None):
         """Rebuild from MANIFEST + WAL replay after a crash/restart.
 
         Recovery consults the lease journal first: write leases orphaned by
@@ -896,6 +899,7 @@ class OffloadDB:
         below can read those blocks. WAL replay then trusts only the intact
         device prefix — with async shipping the durability watermark at
         crash time, not the logical tail."""
+        cfg = cfg if cfg is not None else DBConfig()
         db = cls.__new__(cls)
         db.fs = fs
         db.off = offloader

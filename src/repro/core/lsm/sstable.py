@@ -97,7 +97,7 @@ class SSTableReader:
         return None
 
     def items(self) -> Iterable[Tuple[bytes, bytes]]:
-        for k, o in self.index:
+        for _k, o in self.index:
             key, val, _ = decode_record(self.buf, o)
             yield key, val
 

@@ -99,6 +99,7 @@ class WalShipper:
     def ship(self, path: str, offset: int, payload: bytes):
         """Submit one sealed segment; returns the RpcFuture. `offset` must
         be block-aligned; `payload` carries the (head-spliced) bytes."""
+        # reprolint: allow[lease-raw] released by the _release done-callback when the append lands
         runs, lease = self.fs.prepare_write(
             path, offset, len(payload), lease=True
         )

@@ -464,6 +464,7 @@ class TaskOffloader:
         **kwargs,
     ) -> OffloadFuture:
         dst = target or self._route(read_extents, write_extents)
+        # reprolint: allow[lease-raw] released in the RPC completion callback, not in this scope
         lease = self.fs.grant_lease(read_extents, write_extents)
         nb = self._lease_blocks(lease)
         self._begin(dst, nb)
@@ -742,6 +743,7 @@ class TaskOffloader:
                 dst = s.get("target") or self._route(
                     s.get("read_extents", ()), s.get("write_extents", ())
                 )
+                # reprolint: allow[lease-raw] released per-share in _landed/_fallback callbacks
                 lease = self.fs.grant_lease(
                     s.get("read_extents", ()), s.get("write_extents", ())
                 )

@@ -234,9 +234,8 @@ def verify_program(prog: Any) -> dict:
     if agg is not None and proj is not None:
         raise ProgramError("'aggregate' and 'project' are exclusive")
     flt = prog.get("filter")
-    if flt is not None:
-        if _type_of(flt, 1, [MAX_NODES], set()) != "bool":
-            raise ProgramError("filter must evaluate to a boolean")
+    if flt is not None and _type_of(flt, 1, [MAX_NODES], set()) != "bool":
+        raise ProgramError("filter must evaluate to a boolean")
     try:
         size = len(pickle.dumps(prog))
     except Exception as e:  # unpicklable payload smuggled into the tree

@@ -122,7 +122,7 @@ class StripeRebalancer:
         the routing key placement-affinity uses, hence the traffic each
         stripe's FIFO will serve."""
         load = {k: 0 for k in range(self.fs.shards)}
-        for path, (shard, nblocks) in self._file_placement().items():
+        for _path, (shard, nblocks) in self._file_placement().items():
             load[shard] += nblocks
         return load
 

@@ -432,19 +432,13 @@ class ClusterRouter:
             }, async_=True)
         except LookupError:  # no targets at all: run on the initiator
             try:
-                lease = self.fs.grant_lease(s["read_extents"],
-                                            s["write_extents"])
+                with self.fs.lease_scope(s["read_extents"],
+                                         s["write_extents"]) as lease:
+                    result = self.off._run_local(
+                        s["task"], lease, s["args"], s["kwargs"], s["mtime"])
             except BaseException as g:  # noqa: BLE001
                 req.future.set_exception(g)
                 return
-            try:
-                result = self.off._run_local(
-                    s["task"], lease, s["args"], s["kwargs"], s["mtime"])
-            except BaseException as g:  # noqa: BLE001
-                self.fs.release_lease(lease)
-                req.future.set_exception(g)
-                return
-            self.fs.release_lease(lease)
             with self.off._lock:
                 self.off.stats.ran_local += 1
             req.future.set_result((result, self.off.node))

@@ -327,8 +327,9 @@ class KvCacheStore:
         def on_done(idx):
             def _cb(f):
                 if f.exception() is None:
+                    payload = f.result()[0]  # may block: resolve OUTSIDE alock
                     with alock:
-                        arrivals.append((idx, f.result()[0]))
+                        arrivals.append((idx, payload))
             return _cb
 
         if self.router is not None:

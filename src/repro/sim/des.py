@@ -19,6 +19,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Any, Dict, Generator, List, Optional
 
+_INF = float("inf")
+
 
 class Resource:
     """k-server FIFO queue with a scalar service rate (units/second)."""
@@ -86,7 +88,7 @@ class Sim:
         )
         return h
 
-    def run(self, until: float = float("inf")) -> float:
+    def run(self, until: float = _INF) -> float:
         while self._q:
             ev = heapq.heappop(self._q)
             if ev.t > until:

@@ -1,0 +1,8 @@
+"""Fixture: callers of the pre-PR-7 submit shims. Expected: 3
+deprecated-api findings, one per call site."""
+
+
+def drive(off, spec, specs):
+    off.submit_task("count_rows", 1)
+    off.submit_many(specs)
+    return off.submit_async(spec)

@@ -1,0 +1,12 @@
+"""Fixture: the consolidated entry point + a bare-name def that shares a
+shim's name (the RPC handler registration case). Expected: clean."""
+
+
+def drive(off, spec, specs):
+    off.submit(spec)
+    off.submit(specs, stream=True)
+    return off.submit(spec, async_=True)
+
+
+def submit_task(node, task, wire):  # defining the handler is not a call
+    return node, task, wire

@@ -1,0 +1,12 @@
+"""Fixture: extent-state mutations with no lease fence (file is named
+``fs.py`` so the journal-before-mutate pass is in scope).
+
+Expected findings: journal-before-mutate at the free AND the trim.
+"""
+
+
+class MiniFS:
+    def truncate_unfenced(self, drop):
+        self.extmgr.free(drop)
+        for e in drop:
+            self.dev.trim(e.block, e.nblocks)

@@ -1,0 +1,7 @@
+"""Fixture: same mutator calls OUTSIDE the extent-lease core file set
+(fs.py / extents.py / rebalance.py) — out of scope. Expected: clean."""
+
+
+class Cache:
+    def evict(self, drop):
+        self.extmgr.free(drop)  # not the extent core: no fence required

@@ -1,0 +1,13 @@
+"""Fixture: fenced mutations in the extent-lease core. Expected: clean."""
+
+
+class MiniFS:
+    def truncate_fenced(self, drop, blocks):
+        self._check_not_leased(blocks)
+        self.extmgr.free(drop)
+        for e in drop:
+            self.dev.trim(e.block, e.nblocks)
+
+    def replay_then_reclaim(self, drop):
+        self.journal.replay()
+        self.extmgr.free(drop)

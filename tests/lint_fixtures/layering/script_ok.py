@@ -1,0 +1,7 @@
+"""Fixture: a script OUTSIDE src/ — no layer identity, may import
+anything. Expected: clean."""
+from repro.serve import kvstore
+
+
+def main():
+    return kvstore

@@ -1,0 +1,9 @@
+"""Fixture: layer inversions from repro.core. Expected: 3 layering
+findings (module import, from-import, lazy function-level import)."""
+import repro.sim.cluster
+from repro.serve import kvstore
+
+
+def lazy():
+    from repro.data import loader  # lazy import still creates the edge
+    return loader, kvstore, repro.sim.cluster

@@ -1,0 +1,8 @@
+"""Fixture: allowed imports from repro.core. Expected: clean."""
+import json
+
+from repro.core import extents  # same layer: fine
+
+
+def use():
+    return json, extents

@@ -1,0 +1,7 @@
+"""Fixture: kernels reaching into host logic. Expected: 1 layering
+finding (kernels must stay importable without the storage core)."""
+from repro.core import fs
+
+
+def kernel():
+    return fs

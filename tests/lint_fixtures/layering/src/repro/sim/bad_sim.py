@@ -1,0 +1,7 @@
+"""Fixture: simulator importing the serving plane. Expected: 1 layering
+finding."""
+import repro.serve.kvstore
+
+
+def simulate():
+    return repro.serve.kvstore

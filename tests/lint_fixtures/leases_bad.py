@@ -1,0 +1,18 @@
+"""Fixture: raw lease acquisitions with no structured release path.
+
+Expected findings: lease-raw at BOTH grant sites — an exception between
+grant and release leaks quiesced blocks forever (no DLM to time them out).
+"""
+
+
+def leak_on_error(fs, extents):
+    lease = fs.grant_lease(extents, ())
+    data = fs.read("/f")  # may raise: the lease above leaks
+    fs.release_lease(lease)
+    return data
+
+
+def prepare_write_leaks(fs):
+    runs, lease = fs.prepare_write("/f", 0, 4096, lease=True)
+    fs.release_lease(lease)
+    return runs

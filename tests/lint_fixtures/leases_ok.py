@@ -1,0 +1,39 @@
+"""Fixture: every accepted lease-acquisition shape. Expected: clean."""
+
+
+def scoped(fs, extents):
+    with fs.lease_scope(extents, ()) as lease:
+        return fs.read("/f"), lease.task_id
+
+
+def scoped_write(fs):
+    with fs.write_lease("/f", offset=0, length=4096) as lease:
+        return lease.task_id
+
+
+def try_finally(fs, extents):
+    lease = fs.grant_lease(extents, ())
+    try:
+        return fs.read("/f")
+    finally:
+        fs.release_lease(lease)
+
+
+def crash_semantics(fs, extents):
+    """The lease_scope pattern itself: release on plain failure AND on
+    success, but let simulated process death (BaseException) leave the
+    journaled grant for remount fencing."""
+    lease = fs.grant_lease(extents, ())
+    try:
+        out = fs.read("/f")
+    except Exception:
+        fs.release_lease(lease)
+        raise
+    else:
+        fs.release_lease(lease)
+    return out
+
+
+def plain_prepare(fs):
+    runs = fs.prepare_write("/f", 0, 4096)  # no lease=True: not a grant
+    return runs

@@ -1,0 +1,22 @@
+"""Fixture: blocking calls made while holding a lock.
+
+Expected findings: blocking-under-lock at all four marked sites.
+"""
+import time
+
+
+class Worker:
+    def heartbeat(self, fabric, dst):
+        with self._lock:
+            time.sleep(0.1)  # stalls every contender
+            fabric.call(self.node, dst, "ping")  # sync RPC under the lock
+
+    def wait_result(self, fut):
+        with self._mutex:
+            return fut.result()  # completion may need _mutex: deadlock
+
+    def drain(self, q):
+        self._lock.acquire()
+        item = q.get()  # manual acquire()/release() span counts too
+        self._lock.release()
+        return item

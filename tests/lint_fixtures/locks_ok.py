@@ -1,0 +1,25 @@
+"""Fixture: the accepted shapes around locks. Expected: clean."""
+import time
+
+
+class Worker:
+    def heartbeat(self, fabric, dst):
+        with self._lock:
+            fut = fabric.call_async(self.node, dst, "ping")  # async: fine
+        time.sleep(0.1)  # blocking OUTSIDE the lock
+        return fut.result()
+
+    def nonblocking_get(self, q):
+        with self._lock:
+            return q.get(block=False)
+
+    def callback_defined_under_lock(self, fut):
+        with self._lock:
+            def _cb(f):
+                return f.result()  # runs later, WITHOUT the lock
+            fut.add_done_callback(_cb)
+
+    def condition_wait(self, item):
+        with self._cv:  # condition variables release while waiting: exempt
+            self._cv.wait()
+            return item

@@ -1,0 +1,12 @@
+"""Fixture: both suppression placements, each with a reason. Expected:
+0 actionable findings, 2 suppressed."""
+
+
+def standalone_comment(fs, extents):
+    # reprolint: allow[lease-raw] fixture: comment line above covers the grant
+    lease = fs.grant_lease(extents, ())
+    return lease
+
+
+def same_line(off, spec):
+    return off.submit_task(spec)  # reprolint: allow[deprecated-api] fixture: same-line suppression

@@ -1,0 +1,7 @@
+"""Fixture: a suppression comment with NO reason string. Expected: the
+finding is still reported (with a note) — empty reasons do not suppress."""
+
+
+def undocumented(fs, extents):
+    lease = fs.grant_lease(extents, ())  # reprolint: allow[lease-raw]
+    return lease

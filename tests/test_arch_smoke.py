@@ -98,7 +98,7 @@ def test_scan_equals_unroll():
     stack = ps["stack"]["scan"]
     layers = []
     for i in range(4):
-        layers.extend(jax.tree.map(lambda a: a[i], stack))
+        layers.extend(jax.tree.map(lambda a, i=i: a[i], stack))
     pu = dict(ps)
     pu["stack"] = {"unroll": tuple(layers)}
     toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg_u.vocab_size)

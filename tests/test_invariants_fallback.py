@@ -323,6 +323,7 @@ def test_router_schedule_never_leaks_leases(seed):
         p = f"/crash{i}"
         fs.create(p)
         fs.write(p, b"\x02" * BLOCK_SIZE, 0)
+        # reprolint: allow[lease-raw] deliberate orphans: fallback invariant asserts they are fenced
         survivors.append(fs.grant_lease((), fs.stat(p).extents))
     fs.flush_metadata()
     fs2, fenced = standby_takeover(dev, node="standby0")

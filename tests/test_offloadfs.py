@@ -38,6 +38,7 @@ def test_lease_blocks_initiator_writes():
     fs.create("/a")
     fs.write("/a", b"y" * BLOCK_SIZE * 4, 0)
     ex = fs.stat("/a").extents
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease = fs.grant_lease([], ex)
     with pytest.raises(LeaseViolation):
         fs.write("/a", b"z" * BLOCK_SIZE, 0)
@@ -45,6 +46,36 @@ def test_lease_blocks_initiator_writes():
         fs.delete("/a")
     fs.release_lease(lease)
     fs.write("/a", b"z" * BLOCK_SIZE, 0)  # ok now
+
+
+def test_truncate_refuses_leased_drop_blocks():
+    """truncate frees+trims the dropped tail — like delete/rename it must
+    fence BOTH lease kinds over exactly those blocks (PR 9 fix: the tail
+    of a file a task was still writing could be recycled under it)."""
+    _, fs = make_fs()
+    fs.create("/a")
+    fs.write("/a", b"t" * BLOCK_SIZE * 4, 0)
+    tail = [e for e in fs.stat("/a").extents]
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
+    wlease = fs.grant_lease([], tail)
+    with pytest.raises(LeaseViolation):
+        fs.truncate("/a", BLOCK_SIZE)  # dropped blocks are write-leased
+    fs.release_lease(wlease)
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
+    rlease = fs.grant_lease(tail, [])
+    with pytest.raises(LeaseViolation):
+        fs.truncate("/a", BLOCK_SIZE)  # dropped blocks are read-leased
+    fs.release_lease(rlease)
+    fs.truncate("/a", BLOCK_SIZE)  # unleased: proceeds
+    assert fs.stat("/a").size == BLOCK_SIZE
+    # truncating only the UNLEASED tail under a lease on the kept head is
+    # fine: the fence covers exactly the dropped blocks
+    fs.write("/a", b"h" * BLOCK_SIZE * 2, 0)
+    head = [e for e in fs.stat("/a").extents if e.file_offset == 0][:1]
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
+    hlease = fs.grant_lease([], head)
+    fs.truncate("/a", BLOCK_SIZE)
+    fs.release_lease(hlease)
 
 
 def test_target_cannot_touch_unauthorized_blocks():
@@ -55,6 +86,7 @@ def test_target_cannot_touch_unauthorized_blocks():
     fs.write("/secret", b"s" * BLOCK_SIZE, 0)
     ex = fs.stat("/a").extents
     sx = fs.stat("/secret").extents
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease = fs.grant_lease(ex, [])
     eng = OffloadEngine(fs, node="storage0")
 
@@ -81,6 +113,7 @@ def test_mtime_coherence_bypasses_stale_cache():
     eng.register_stub("read", lambda io, blk: io.offload_read(blk, 1))
     ex = fs.stat("/a").extents
 
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease = fs.grant_lease(ex, [])
     t1 = fs.stat("/a").mtime
     r1 = eng.run_task("read", lease, ex[0].block, mtime=t1)
@@ -88,6 +121,7 @@ def test_mtime_coherence_bypasses_stale_cache():
     assert r1[:1] == b"1"
     # initiator writes directly → cached block is stale
     fs.write("/a", b"2" * BLOCK_SIZE, 0)
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease = fs.grant_lease(ex, [])
     t2 = fs.stat("/a").mtime
     r2 = eng.run_task("read", lease, ex[0].block, mtime=t2)
@@ -119,6 +153,7 @@ def test_initiator_read_of_leased_write_blocks_raises():
     fs.create("/other")
     fs.write("/other", b"o" * BLOCK_SIZE, 0)
     ex = fs.stat("/a").extents
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease = fs.grant_lease([], ex)
     with pytest.raises(LeaseViolation):
         fs.read("/a")
@@ -128,6 +163,7 @@ def test_initiator_read_of_leased_write_blocks_raises():
     fs.release_lease(lease)
     assert fs.read("/a") == b"y" * BLOCK_SIZE * 4
     # READ leases do not quiesce the initiator (it only must not mutate)
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease = fs.grant_lease(ex, [])
     assert fs.read("/a") == b"y" * BLOCK_SIZE * 4
     fs.release_lease(lease)
@@ -138,12 +174,14 @@ def test_double_release_is_idempotent():
     fs.create("/a")
     fs.write("/a", b"x" * BLOCK_SIZE * 2, 0)
     ex = fs.stat("/a").extents
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease = fs.grant_lease([], ex)
     fs.release_lease(lease)
     fs.release_lease(lease)  # second release: no-op, no raise
     assert lease.done
     fs.write("/a", b"w" * BLOCK_SIZE, 0)  # blocks really free
     # a later lease over the same blocks is unaffected by the stale handle
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease2 = fs.grant_lease([], ex)
     fs.release_lease(lease)  # releasing the OLD lease again: still no-op
     with pytest.raises(LeaseViolation):
@@ -161,6 +199,7 @@ def test_stale_mtime_reads_bypass_offload_cache_counted():
     eng.register_stub("read", lambda io, blk, n: io.offload_read(blk, n))
     ex = fs.stat("/a").extents
 
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease = fs.grant_lease(ex, [])
     t1 = fs.stat("/a").mtime
     eng.run_task("read", lease, ex[0].block, 3, mtime=t1)  # warm: 3 misses
@@ -168,6 +207,7 @@ def test_stale_mtime_reads_bypass_offload_cache_counted():
     assert eng.cache.stats.misses == 3 and eng.cache.stats.bypasses == 0
     # initiator overwrites → all 3 cached blocks are stale
     fs.write("/a", b"2" * BLOCK_SIZE * 3, 0)
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease = fs.grant_lease(ex, [])
     t2 = fs.stat("/a").mtime
     r = eng.run_task("read", lease, ex[0].block, 3, mtime=t2)
@@ -175,6 +215,7 @@ def test_stale_mtime_reads_bypass_offload_cache_counted():
     assert r == b"2" * BLOCK_SIZE * 3  # fresh data, not the stale cache
     assert eng.cache.stats.bypasses == 3  # every stale block counted
     # re-read at same mtime now hits (cache was refreshed by the bypass)
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease = fs.grant_lease(ex, [])
     eng.run_task("read", lease, ex[0].block, 3, mtime=t2)
     fs.release_lease(lease)
@@ -229,6 +270,7 @@ def test_rename_over_leased_destination_raises():
     fs.write("/a", b"A" * BLOCK_SIZE, 0)
     fs.create("/b")
     fs.write("/b", b"B" * BLOCK_SIZE, 0)
+    # reprolint: allow[lease-raw] exercises the raw grant/release lease protocol under test
     lease = fs.grant_lease([], fs.stat("/b").extents)
     with pytest.raises(LeaseViolation):
         fs.rename("/a", "/b")

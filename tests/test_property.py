@@ -106,6 +106,7 @@ def run_router_schedule(rng):
         p = f"/crash{i}"
         fs.create(p)
         fs.write(p, b"\x02" * BLOCK_SIZE, 0)
+        # reprolint: allow[lease-raw] deliberate orphans: property run asserts takeover fences them
         survivors.append(fs.grant_lease((), fs.stat(p).extents))
     fs.flush_metadata()
     fs2, fenced = standby_takeover(dev, node="standby0")

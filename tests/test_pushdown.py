@@ -166,6 +166,7 @@ def test_engine_independently_reverifies_program():
     ino = fs.stat(db.tables[tid].path)
     tables = [{"runs": [(e.block, e.nblocks) for e in ino.extents],
                "size": ino.size, "rank": 3}]
+    # reprolint: allow[lease-raw] test hand-builds wire authorization from a raw grant; released in-test
     lease = fs.grant_lease(ino.extents, ())
     wire = {"task_id": lease.task_id,
             "read_blocks": sorted(lease.read_blocks), "write_blocks": []}
@@ -179,6 +180,7 @@ def test_engine_independently_reverifies_program():
     fs.release_lease(lease)
     assert not fs._leases
     # the same lease/table shape with a VERIFIED program works fine
+    # reprolint: allow[lease-raw] test hand-builds wire authorization from a raw grant; released in-test
     lease = fs.grant_lease(ino.extents, ())
     wire = {"task_id": lease.task_id,
             "read_blocks": sorted(lease.read_blocks), "write_blocks": []}
@@ -314,14 +316,17 @@ def test_deprecated_shims_warn_and_behave_identically():
     new = off.submit(dict(spec))
     assert new == (7 * BLOCK_SIZE % 65536, "storage0")
     with pytest.warns(DeprecationWarning, match="submit_task is deprecated"):
+        # reprolint: allow[deprecated-api] back-compat coverage for the deprecated shim itself
         old = off.submit_task("sum", ext[0].block, 1,
                               read_extents=ext, mtime=mtime)
     assert old == new
     with pytest.warns(DeprecationWarning, match="submit_async is deprecated"):
+        # reprolint: allow[deprecated-api] back-compat coverage for the deprecated shim itself
         fut = off.submit_async("sum", ext[0].block, 1,
                                read_extents=ext, mtime=mtime)
     assert fut.result(timeout=30) == new
     with pytest.warns(DeprecationWarning, match="submit_many is deprecated"):
+        # reprolint: allow[deprecated-api] back-compat coverage for the deprecated shim itself
         many = off.submit_many([dict(spec), dict(spec)])
     assert many == [new, new]
     wait_no_leases(fs)

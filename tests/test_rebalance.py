@@ -52,12 +52,14 @@ def test_migrate_same_shard_is_noop_repin():
 def test_migrate_refuses_leased_source():
     dev, fs = make_fs()
     fill(fs, "/a", 0, 4, 0x33)
+    # reprolint: allow[lease-raw] held lease is the fixture: migrate/rebalance must refuse it
     lease = fs.grant_lease([], fs.stat("/a").extents)
     with pytest.raises(LeaseViolation):
         fs.migrate_file("/a", 1)
     fs.release_lease(lease)
     # a READ lease must refuse too: migration would free + trim the blocks
     # the offloaded reader is still authorized to read
+    # reprolint: allow[lease-raw] held lease is the fixture: migrate/rebalance must refuse it
     rlease = fs.grant_lease(fs.stat("/a").extents, [])
     with pytest.raises(LeaseViolation):
         fs.migrate_file("/a", 1)
@@ -219,6 +221,7 @@ def test_rebalance_skips_leased_files():
     dev, fs = make_fs()
     fill(fs, "/big", 0, 10, 0x31)
     fill(fs, "/small", 0, 4, 0x32)
+    # reprolint: allow[lease-raw] held lease is the fixture: migrate/rebalance must refuse it
     lease = fs.grant_lease([], fs.stat("/big").extents)
     rb = StripeRebalancer(fs)
     moved = rb.rebalance(max_files=4)

@@ -46,10 +46,14 @@ def test_orphan_write_leases_survive_crash_and_remount():
     fs.write("/a", b"x" * BLOCK_SIZE * 8, 0)
     fs.create("/b")
     fs.write("/b", b"y" * BLOCK_SIZE * 4, 0)
+    # reprolint: allow[lease-raw] deliberate orphan grants: journal replay + fencing under test
     la = fs.grant_lease([], fs.stat("/a").extents)
+    # reprolint: allow[lease-raw] deliberate orphan grants: journal replay + fencing under test
     fs.grant_lease([], fs.stat("/b").extents)
+    # reprolint: allow[lease-raw] deliberate orphan grants: journal replay + fencing under test
     released = fs.grant_lease([], fs.stat("/a").extents[:0] or [])
     fs.release_lease(released)
+    # reprolint: allow[lease-raw] deliberate orphan grants: journal replay + fencing under test
     ro = fs.grant_lease(fs.stat("/b").extents, [])  # read-only: not journaled
     fs.flush_metadata()
     del ro
@@ -78,12 +82,14 @@ def test_clean_release_leaves_no_orphans():
     fs.create("/a")
     fs.write("/a", b"x" * BLOCK_SIZE * 4, 0)
     for _ in range(100):  # journal appends + wrap-free reuse
+        # reprolint: allow[lease-raw] deliberate orphan grants: journal replay + fencing under test
         lease = fs.grant_lease([], fs.stat("/a").extents)
         fs.release_lease(lease)
     fs.flush_metadata()
     fs2 = OffloadFS.mount(dev, node="init0")
     assert fs2.orphan_leases() == []
     # task ids keep monotonically increasing across the re-mount
+    # reprolint: allow[lease-raw] deliberate orphan grants: journal replay + fencing under test
     nxt = fs2.grant_lease([], fs2.stat("/a").extents)
     assert nxt.task_id > lease.task_id
 
@@ -94,6 +100,7 @@ def test_torn_journal_tail_drops_only_uncommitted_record():
     for name in ("/a", "/b", "/c"):
         fs.create(name)
         fs.write(name, b"x" * BLOCK_SIZE * 2, 0)
+        # reprolint: allow[lease-raw] deliberate orphan grants: journal replay + fencing under test
         leases.append(fs.grant_lease([], fs.stat(name).extents))
     fs.flush_metadata()
     # torn tail: truncate the LAST journal record mid-payload on the device
@@ -126,11 +133,13 @@ def test_journal_compaction_keeps_outstanding_grants():
     dev, fs = make_fs()
     fs.create("/a")
     fs.write("/a", b"x" * BLOCK_SIZE * 2, 0)
+    # reprolint: allow[lease-raw] deliberate orphan grants: journal replay + fencing under test
     keep = fs.grant_lease([], fs.stat("/a").extents)
     # churn far past the journal capacity: compaction must kick in
     fs.create("/b")
     fs.write("/b", b"y" * BLOCK_SIZE * 2, 0)
     for _ in range(8000):
+        # reprolint: allow[lease-raw] deliberate orphan grants: journal replay + fencing under test
         lease = fs.grant_lease([], fs.stat("/b").extents)
         fs.release_lease(lease)
     assert fs.lease_journal.compactions >= 1
@@ -212,6 +221,7 @@ def test_db_crash_remount_recovers_durable_prefix_and_reclaims_orphans():
     # crash with an un-released submit_many-style write lease outstanding
     fs.create("/pending-output")
     fs.fallocate("/pending-output", 32 * 1024)
+    # reprolint: allow[lease-raw] deliberate orphan grants: journal replay + fencing under test
     orphan = fs.grant_lease((), fs.stat("/pending-output").extents)
     fabric.drain()
 
@@ -274,6 +284,7 @@ def test_fresh_mkfs_does_not_resurrect_previous_journal_generation():
     dev, fs1 = make_fs()
     fs1.create("/old")
     fs1.write("/old", b"o" * BLOCK_SIZE * 4, 0)
+    # reprolint: allow[lease-raw] deliberate orphan grants: journal replay + fencing under test
     fs1.grant_lease([], fs1.stat("/old").extents)  # journaled, never released
     fs1.flush_metadata()
     # operator re-mkfs's the volume: new generation, NO write leases granted

@@ -404,6 +404,7 @@ def test_standby_takeover_fences_every_orphan_and_reads_identical():
         fs.create(p)
         fs.write(p, data, 0)
     fs.flush_metadata()
+    # reprolint: allow[lease-raw] deliberate orphans: standby takeover must fence them
     leases = [fs.grant_lease((), fs.stat(p).extents) for p in payload]
     orphan_tids = {ls.task_id for ls in leases}
     # ...the initiator process is now "dead"; nothing was released.
@@ -433,6 +434,7 @@ def _run_failover_child(tmpdir: str) -> None:
         fs.create(p)
         fs.write(p, data, 0)
     fs.flush_metadata()
+    # reprolint: allow[lease-raw] deliberate orphans: standby takeover must fence them
     leases = [fs.grant_lease((), fs.stat(p).extents)
               for p in list(payload)[:2]]  # 2 in-flight "flushes"
     dev.save(os.path.join(tmpdir, "volume.bin"))

@@ -81,7 +81,8 @@ def test_batch_byte_accounting_equals_individual_calls():
         [("probe", a, kw) for a, kw in args_list],
     )
     assert batched == singles
-    fab_1.drain(), fab_n.drain()
+    fab_1.drain()
+    fab_n.drain()
     # bytes identical, message count collapses to 1
     assert fab_n.total_bytes() == fab_1.total_bytes()
     assert fab_1.total_messages() == len(args_list)

@@ -1,0 +1,1 @@
+# repo tooling package (`python -m tools.reprolint`, `tools/check_docs.py`)

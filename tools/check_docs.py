@@ -13,7 +13,10 @@ Scans ``docs/*.md`` and ``README.md`` for:
     repo root;
   * benchmark coverage: every benchmark module in ``benchmarks/`` (except
     the harness/helpers) must be documented in ``docs/BENCHMARKS.md`` —
-    an undocumented figure module fails the docs job.
+    an undocumented figure module fails the docs job;
+  * analysis coverage: every pass registered in ``tools.reprolint.passes``
+    must be documented in ``docs/ANALYSIS.md`` — adding a pass without
+    documenting it fails the docs job.
 
 Exit code = number of broken references; each is printed as
 ``file:line: message``.
@@ -89,12 +92,29 @@ def check_bench_coverage() -> list:
     return errors
 
 
+def check_analysis_coverage() -> list:
+    """Every registered reprolint pass must be documented in ANALYSIS.md."""
+    doc = ROOT / "docs" / "ANALYSIS.md"
+    if not doc.exists():
+        return ["docs/ANALYSIS.md: missing (static-analysis docs required)"]
+    if str(ROOT) not in sys.path:
+        sys.path.insert(0, str(ROOT))
+    from tools.reprolint.passes import PASSES
+    text = doc.read_text(encoding="utf-8")
+    return [
+        f"docs/ANALYSIS.md: reprolint pass `{rule}` is registered but "
+        "undocumented"
+        for rule in sorted(PASSES) if f"`{rule}`" not in text
+    ]
+
+
 def main() -> int:
     files = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
     errors = []
     for md in files:
         errors.extend(check_file(md))
     errors.extend(check_bench_coverage())
+    errors.extend(check_analysis_coverage())
     for e in errors:
         print(e)
     print(f"checked {len(files)} files, {len(errors)} broken references")

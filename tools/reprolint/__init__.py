@@ -1,0 +1,12 @@
+"""reprolint — the repo's lease/lock/layering static-analysis plane.
+
+CLI:   python -m tools.reprolint src/ benchmarks/ examples/
+API:   from tools.reprolint import run, Finding, PASSES
+
+See docs/ANALYSIS.md for the pass catalog, suppression syntax and the
+baseline mechanism.
+"""
+from tools.reprolint.core import (AnalysisResult, DEFAULT_EXCLUDES,  # noqa
+                                  Finding, format_baseline, load_baseline,
+                                  run)
+from tools.reprolint.passes import PASSES  # noqa

@@ -1,0 +1,89 @@
+"""reprolint CLI — ``python -m tools.reprolint [paths...]``.
+
+Exit codes: 0 = clean (every finding suppressed-with-reason or baselined),
+1 = unsuppressed findings, 2 = usage error. The CI ``static-analysis`` job
+gates on this; docs/ANALYSIS.md documents each pass and the suppression /
+baseline mechanics.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Optional, Sequence
+
+from tools.reprolint.core import (DEFAULT_EXCLUDES, REPO_ROOT, format_baseline,
+                                  load_baseline, run)
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+DEFAULT_BASELINE = REPO_ROOT / "tools" / "reprolint" / "baseline.txt"
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    from tools.reprolint.passes import PASSES
+
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="AST static analysis for the repo's lease/lock/layering "
+                    "discipline (docs/ANALYSIS.md).",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to analyze (default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--rules", help="comma-separated pass ids (default: all)")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="baseline file of grandfathered findings")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline with the current findings "
+                         "and exit 0")
+    ap.add_argument("--exclude", action="append", default=[],
+                    metavar="GLOB", help="additional path globs to skip")
+    ap.add_argument("--no-default-excludes", action="store_true",
+                    help=f"do not skip {DEFAULT_EXCLUDES} (fixture corpus)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--list-passes", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for rule, mod in sorted(PASSES.items()):
+            print(f"{rule:22s} {mod.DOC}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    exclude = tuple(args.exclude) + (
+        () if args.no_default_excludes else DEFAULT_EXCLUDES
+    )
+    paths = args.paths or [REPO_ROOT / p for p in DEFAULT_PATHS]
+    try:
+        baseline = load_baseline(args.baseline)
+        res = run(paths, rules=rules, exclude=exclude, baseline=baseline)
+    except (FileNotFoundError, ValueError) as e:
+        print(f"reprolint: error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        args.baseline.write_text(
+            format_baseline(res.findings + res.baselined), encoding="utf-8"
+        )
+        print(f"reprolint: baseline written to {args.baseline} "
+              f"({len(res.findings) + len(res.baselined)} entries)")
+        return 0
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [vars(f) | {"fingerprint": f.fingerprint}
+                         for f in res.findings],
+            "suppressed": len(res.suppressed),
+            "baselined": len(res.baselined),
+            "files": res.files,
+        }, indent=2))
+    else:
+        for f in res.findings:
+            print(f.render())
+        status = "clean" if res.ok else f"{len(res.findings)} finding(s)"
+        print(f"reprolint: {status} across {res.files} file(s) "
+              f"({len(res.suppressed)} suppressed, "
+              f"{len(res.baselined)} baselined)")
+    return 0 if res.ok else 1

@@ -1,0 +1,44 @@
+"""deprecated-api — statically catch callers of the legacy submit shims.
+
+PR 7 consolidated the offload plane onto ONE entry point,
+``TaskOffloader.submit(specs, *, stream, reroute, async_)``; the old names
+survive only as warning shims. The runtime gate (``pytest.ini`` turns the
+shims' DeprecationWarning into an error for ``repro.*`` callers) only
+fires on code a test actually executes — benchmarks, examples, tools and
+cold paths sail through. This pass closes that gap: ANY call of a shim
+name, anywhere the analyzer scans, is flagged at the call site.
+
+Back-compat tests that exercise the shims on purpose carry
+``# reprolint: allow[deprecated-api] <reason>`` suppressions.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from tools.reprolint.core import Finding, ParsedModule
+
+RULE = "deprecated-api"
+DOC = ("call sites of the deprecated submit_task / submit_many / "
+       "submit_async shims (use TaskOffloader.submit)")
+
+SHIMS = {
+    "submit_task": "submit(spec) or submit(task, *args)",
+    "submit_many": "submit(specs) / submit(specs, stream=True)",
+    "submit_async": "submit(spec, async_=True)",
+}
+
+
+def check(mod: ParsedModule) -> Iterable[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not isinstance(node.func, ast.Attribute):
+            continue  # bare names: the shim defs/registrations themselves
+        name = node.func.attr
+        if name in SHIMS:
+            yield mod.finding(
+                node, RULE,
+                f".{name}() is a deprecated shim — use "
+                f"TaskOffloader.{SHIMS[name]}",
+            )

@@ -1,0 +1,90 @@
+"""journal-before-mutate — extent-state mutations need a lease fence first.
+
+Within the extent/lease core (``fs.py``, ``extents.py``, ``rebalance.py``),
+freeing or trimming blocks while a lease might be outstanding corrupts the
+no-DLM story: a target mid-write (write lease) or mid-read (read lease)
+would see its blocks recycled under it, and a crash between the mutation
+and the journal record would leave the on-device lease journal pointing at
+state that no longer exists.
+
+The checkable discipline: every call to a block-state mutator
+(``*.extmgr.free(...)``, ``*.dev.trim(...)``) must be *dominated* — earlier
+in the same function body, nested defs excluded — by a lease fence:
+
+  * a lease check (``_check_not_leased``), or
+  * a scoped/journaled acquisition (``lease_scope`` / ``write_lease`` /
+    ``read_lease`` / ``grant_lease``), or
+  * a lease-journal record call (``append_grant`` / ``append_release`` /
+    ``compact`` / ``replay`` / ``drop_outstanding`` on a journal receiver).
+
+Dominance is linear (guard line ≤ mutator line), which matches how the
+core is written: the guard runs at the top of the critical section, the
+mutation at the bottom. ``mount``-time rebuilds allocate with ``carve``
+(not a mutator) so fresh-mount paths are naturally out of scope.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Tuple
+
+from tools.reprolint.core import (Finding, ParsedModule, call_name, dotted,
+                                  function_bodies, own_nodes)
+
+RULE = "journal-before-mutate"
+DOC = ("extmgr.free / dev.trim in the extent-lease core not dominated by a "
+       "lease check, scoped lease, or lease-journal record")
+
+FILES = ("fs.py", "extents.py", "rebalance.py")
+
+_MUTATORS = (("extmgr", "free"), ("dev", "trim"))
+_GUARD_CALLS = {"_check_not_leased", "lease_scope", "write_lease",
+                "read_lease", "grant_lease"}
+_JOURNAL_OPS = {"append_grant", "append_release", "compact", "replay",
+                "drop_outstanding"}
+
+
+def _mutator(call: ast.Call) -> bool:
+    if not isinstance(call.func, ast.Attribute):
+        return False
+    chain = dotted(call.func)
+    if chain is None:
+        return False
+    parts = chain.split(".")
+    if len(parts) < 2:
+        return False
+    recv, attr = parts[-2], parts[-1]
+    return (recv, attr) in _MUTATORS
+
+
+def _guard(call: ast.Call) -> bool:
+    name = call_name(call)
+    if name in _GUARD_CALLS:
+        return True
+    if name in _JOURNAL_OPS and isinstance(call.func, ast.Attribute):
+        chain = (dotted(call.func) or "").lower()
+        return "journal" in chain
+    return False
+
+
+def check(mod: ParsedModule) -> Iterable[Finding]:
+    if mod.path.name not in FILES:
+        return
+    for fn_name, body in function_bodies(mod.tree):
+        guards: List[int] = []
+        mutators: List[Tuple[int, ast.Call]] = []
+        for node in own_nodes(body):
+            if not isinstance(node, ast.Call):
+                continue
+            if _guard(node):
+                guards.append(node.lineno)
+            elif _mutator(node):
+                mutators.append((node.lineno, node))
+        for line, call in mutators:
+            if any(g <= line for g in guards):
+                continue
+            yield mod.finding(
+                call, RULE,
+                f"{dotted(call.func)}() in {fn_name}() is not dominated by "
+                "a lease check, scoped lease, or lease-journal record — "
+                "freeing/trimming possibly-leased blocks",
+            )

@@ -1,0 +1,65 @@
+"""layering — the import DAG between subsystems is enforced, not implied.
+
+The repo's layer map (docs/ARCHITECTURE.md) is a DAG: the storage core
+must not know about the planes built on top of it, the kernels must stay
+host-logic-free, and the simulator must not reach into the serving plane.
+Before this pass, that was convention; a single convenience import could
+invert a layer silently. Rules (source prefix → forbidden prefixes):
+
+  * ``repro.core``    ✗→ ``repro.serve``, ``repro.sim``, ``repro.data``
+  * ``repro.kernels`` ✗→ ``repro.core``
+  * ``repro.sim``     ✗→ ``repro.serve``
+
+Both module-level and function-level (lazy) imports are checked — a lazy
+import still creates the dependency. Only ``src/``-rooted modules have a
+layer identity; scripts (benchmarks, tools, tests) may import anything.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Tuple
+
+from tools.reprolint.core import Finding, ParsedModule
+
+RULE = "layering"
+DOC = ("import-graph DAG: core never imports serve/sim/data, kernels "
+       "never imports core, sim never imports serve")
+
+LAYER_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    ("repro.core", ("repro.serve", "repro.sim", "repro.data")),
+    ("repro.kernels", ("repro.core",)),
+    ("repro.sim", ("repro.serve",)),
+)
+
+
+def _under(mod: str, prefix: str) -> bool:
+    return mod == prefix or mod.startswith(prefix + ".")
+
+
+def _imported_modules(tree: ast.Module) -> List[Tuple[int, str]]:
+    out: List[Tuple[int, str]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            out.extend((node.lineno, a.name) for a in node.names)
+        elif (isinstance(node, ast.ImportFrom) and node.level == 0
+              and node.module):
+            out.append((node.lineno, node.module))
+    return out
+
+
+def check(mod: ParsedModule) -> Iterable[Finding]:
+    if mod.module is None:
+        return
+    for src_prefix, forbidden in LAYER_RULES:
+        if not _under(mod.module, src_prefix):
+            continue
+        for line, target in _imported_modules(mod.tree):
+            for bad in forbidden:
+                if _under(target, bad):
+                    yield Finding(
+                        mod.rel, line, RULE,
+                        f"{mod.module} (layer {src_prefix}) imports "
+                        f"{target}: {src_prefix} must never depend on "
+                        f"{bad} (layer inversion)",
+                        mod.lines[line - 1].strip(),
+                    )

@@ -1,0 +1,106 @@
+"""lease-raw — lease acquisitions must have a structured release path.
+
+The repo's no-DLM correctness story hangs on lease discipline: every
+``grant_lease`` (and ``prepare_write(..., lease=True)``) quiesces blocks on
+the initiator until the matching ``release_lease``. A call site that grants
+raw — outside the scoped context managers ``fs.write_lease`` /
+``fs.read_lease`` / ``fs.lease_scope`` and without a ``try``-structured
+release — leaks quiesced blocks on any exception between grant and release.
+
+A raw grant is accepted when its enclosing function releases structurally:
+
+  * the grant is inside (or immediately precedes) a ``try`` whose
+    ``finally`` calls ``release_lease``; or
+  * the ``try`` releases in BOTH an exception handler and the ``else``
+    branch — the crash-semantics CM pattern (``lease_scope`` itself):
+    a ``BaseException`` that is not an ``Exception`` deliberately leaves
+    the journaled grant for remount fencing.
+
+Everything else is flagged. Known-legit sites (a lease that escapes to a
+completion callback, a benchmark that manufactures orphans on purpose)
+carry ``# reprolint: allow[lease-raw] <reason>`` inline suppressions.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from tools.reprolint.core import Finding, ParsedModule, call_name, own_nodes
+
+RULE = "lease-raw"
+DOC = ("grant_lease / prepare_write(lease=True) outside the scoped lease "
+       "CMs and without a try-structured release_lease path")
+
+_GRANTS = ("grant_lease",)
+
+
+def _is_grant(call: ast.Call) -> bool:
+    name = call_name(call)
+    if name in _GRANTS:
+        return True
+    if name == "prepare_write":
+        return any(
+            kw.arg == "lease"
+            and isinstance(kw.value, ast.Constant) and kw.value.value is True
+            for kw in call.keywords
+        )
+    return False
+
+
+def _calls_release(stmts) -> bool:
+    return any(
+        isinstance(node, ast.Call) and call_name(node) == "release_lease"
+        for node in own_nodes(stmts)
+    )
+
+
+def _releasing_tries(body) -> List[ast.Try]:
+    out = []
+    for node in own_nodes(body):
+        if not isinstance(node, ast.Try):
+            continue
+        if _calls_release(node.finalbody):
+            out.append(node)
+            continue
+        # crash-semantics pattern: release in a handler AND in else —
+        # plain failure and success both release; simulated process death
+        # (BaseException) leaves the journaled grant for remount fencing
+        handler_rel = any(_calls_release(h.body) for h in node.handlers)
+        if handler_rel and _calls_release(node.orelse):
+            out.append(node)
+    return out
+
+
+def check(mod: ParsedModule) -> Iterable[Finding]:
+    for fn_name, body in _functions(mod.tree):
+        tries = _releasing_tries(body)
+        for node in own_nodes(body):
+            if not (isinstance(node, ast.Call) and _is_grant(node)):
+                continue
+            if any(_covers(t, node) for t in tries):
+                continue
+            yield mod.finding(
+                node, RULE,
+                f"raw lease acquisition in {fn_name}() without a scoped CM "
+                "(fs.write_lease/read_lease/lease_scope) or try-structured "
+                "release_lease",
+            )
+
+
+def _covers(t: ast.Try, grant: ast.Call) -> bool:
+    """The try releases this grant: the grant happens inside its body, or
+    the try begins at/after the grant line (grant-then-try-release)."""
+    if t.lineno >= grant.lineno:
+        return True
+    in_body = any(
+        grant is sub
+        for stmt in t.body
+        for sub in ast.walk(stmt)
+    )
+    return in_body
+
+
+def _functions(tree: ast.Module):
+    from tools.reprolint.core import function_bodies
+
+    return function_bodies(tree)

@@ -1,0 +1,179 @@
+"""blocking-under-lock — no blocking calls while holding a mutex.
+
+The offload plane is callback-driven: completion callbacks run on fabric
+threads and routinely need the same locks the submitting thread holds. A
+blocking call made while holding a ``threading.Lock`` (``time.sleep``, a
+synchronous ``fabric.call``/``call_batch``, a blocking ``queue`` get/put,
+``OffloadFuture.result``) therefore stalls every other thread contending
+for that lock — and can deadlock outright when the blocked-on completion
+needs the held lock to make progress (the classic heartbeat-path hang).
+
+Lock regions are ``with <x>.lock / <x>._lock / <x>._mutex:`` blocks (any
+receiver chain; ``RLock`` included) plus linear ``<lock>.acquire()`` …
+``<lock>.release()`` spans in the same statement list. Condition variables
+(``Condition.wait`` releases the lock while waiting) are exempt by naming:
+only names matching ``*lock*``/``*mutex*`` count as locks. Nested function
+bodies are NOT part of the region — a callback defined under a lock runs
+later, without it.
+
+Flagged calls inside a region:
+
+  * ``time.sleep(...)``
+  * ``<...fabric...>.call(...)`` / ``.call_batch(...)`` — the synchronous
+    RPC forms (``call_async``/``call_batch_async`` return futures and are
+    fine; blocking on ``.result()`` under the lock is what gets flagged)
+  * ``<...queue...>.get(...)`` / ``.put(...)`` without ``block=False``
+  * ``<anything>.result(...)`` — future resolution blocks until completion
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Tuple
+
+from tools.reprolint.core import Finding, ParsedModule, dotted, function_bodies
+
+RULE = "blocking-under-lock"
+DOC = ("time.sleep / sync fabric.call / blocking queue get-put / "
+       "future .result() inside a held-lock region")
+
+_LOCKY = ("lock", "mutex")
+_BLOCKING_SET = {"result"}  # any receiver: future resolution
+_QUEUE_OPS = {"get", "put"}
+
+
+def _is_lock_name(name: Optional[str]) -> bool:
+    if not name:
+        return False
+    leaf = name.rsplit(".", 1)[-1].lower()
+    return any(k in leaf for k in _LOCKY)
+
+
+def _lock_ctx(with_node: ast.With) -> Optional[str]:
+    for item in with_node.items:
+        ctx = item.context_expr
+        if isinstance(ctx, ast.Call):
+            ctx = ctx.func  # e.g. lock.acquire_timeout(...) style wrappers
+        name = dotted(ctx)
+        if _is_lock_name(name):
+            return name
+    return None
+
+
+def _blocking_reason(call: ast.Call) -> Optional[str]:
+    func = call.func
+    if isinstance(func, ast.Name):
+        return "time.sleep" if func.id == "sleep" else None
+    if not isinstance(func, ast.Attribute):
+        return None
+    attr = func.attr
+    chain = dotted(func) or attr
+    recv = chain.rsplit(".", 1)[0].lower() if "." in chain else ""
+    if attr == "sleep" and recv.endswith("time"):
+        return "time.sleep"
+    if attr in ("call", "call_batch") and "fabric" in recv:
+        return f"synchronous fabric.{attr}"
+    if attr in _BLOCKING_SET:
+        return f"future .{attr}() (blocks until completion)"
+    if attr in _QUEUE_OPS and ("queue" in recv or recv.endswith("_q")
+                               or recv == "q"):
+        nonblocking = any(
+            kw.arg == "block"
+            and isinstance(kw.value, ast.Constant) and kw.value.value is False
+            for kw in call.keywords
+        ) or (attr == "get" and any(
+            isinstance(a, ast.Constant) and a.value is False
+            for a in call.args[:1]
+        ))
+        if not nonblocking:
+            return f"blocking queue .{attr}()"
+    return None
+
+
+def _walk_skip_defs(root: ast.AST):
+    """Yield descendants without entering nested function/class bodies
+    (code defined there runs later, without the lock)."""
+    stack = [root]
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _scan_stmts(mod: ParsedModule, stmts, held: Tuple[str, ...],
+                out: List[Finding]) -> None:
+    """Walk a statement list tracking held locks; recurse into compound
+    statements, skip nested function/class bodies (deferred execution)."""
+    active: List[str] = []
+    for stmt in stmts:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        # manual acquire()/release() spans at this nesting level
+        for node in _walk_skip_defs(stmt):
+            if isinstance(node, ast.Call) and isinstance(node.func,
+                                                         ast.Attribute):
+                name = dotted(node.func.value)
+                if _is_lock_name(name):
+                    if node.func.attr == "acquire":
+                        active.append(name)
+                    elif node.func.attr == "release" and name in active:
+                        active.remove(name)
+        now_held = held + tuple(active)
+        if isinstance(stmt, ast.With):
+            lock = _lock_ctx(stmt)
+            inner = now_held + ((lock,) if lock else ())
+            if now_held:  # the with-expressions themselves run under held
+                _scan_exprs(mod, [stmt.items], now_held, out)
+            _scan_stmts(mod, stmt.body, inner, out)
+            continue
+        bodies, exprs = _split(stmt)
+        if now_held:
+            _scan_exprs(mod, exprs, now_held, out)
+        for body in bodies:
+            _scan_stmts(mod, body, now_held, out)
+
+
+def _split(stmt: ast.stmt):
+    """(nested statement lists, expression groups) of a compound stmt."""
+    bodies = []
+    for attr in ("body", "orelse", "finalbody"):
+        b = getattr(stmt, attr, None)
+        if b:
+            bodies.append(b)
+    for h in getattr(stmt, "handlers", ()) or ():
+        bodies.append(h.body)
+    # everything not in a nested statement list is expression territory
+    nested = {id(s) for b in bodies for s in b}
+    exprs = [[c for c in ast.iter_child_nodes(stmt)
+              if id(c) not in nested]]
+    return bodies, exprs
+
+
+def _scan_exprs(mod: ParsedModule, groups, held: Tuple[str, ...],
+                out: List[Finding]) -> None:
+    for group in groups:
+        for root in group:
+            for node in _walk_skip_defs(root):
+                if isinstance(node, ast.Call):
+                    reason = _blocking_reason(node)
+                    if reason:
+                        out.append(mod.finding(
+                            node, RULE,
+                            f"{reason} while holding {held[-1]}",
+                        ))
+
+
+def check(mod: ParsedModule) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for _name, body in function_bodies(mod.tree):
+        _scan_stmts(mod, body, (), out)
+    # function_bodies yields nested defs separately; dedupe by location
+    seen = set()
+    for f in out:
+        key = (f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            yield f
