@@ -37,6 +37,7 @@ MODULES = [
     "benchmarks.fig19_router_failover",
     "benchmarks.fig20_kv_serving",
     "benchmarks.fig21_pushdown",
+    "benchmarks.fig22_memtier",
     "benchmarks.roofline_report",
 ]
 
@@ -50,6 +51,7 @@ SMOKE_MODULES = [
     "benchmarks.fig19_router_failover",
     "benchmarks.fig20_kv_serving",
     "benchmarks.fig21_pushdown",
+    "benchmarks.fig22_memtier",
     "benchmarks.roofline_report",
 ]
 

@@ -15,6 +15,11 @@ from repro.core.extents import Extent, ExtentManager  # noqa: F401
 from repro.core.fs import OffloadFS  # noqa: F401
 from repro.core.rpc import FaultyFabric, RpcFabric  # noqa: F401
 from repro.core.engine import OffloadEngine  # noqa: F401
+from repro.core.memtier import (  # noqa: F401
+    MemTier,
+    MemTierNode,
+    serve_memtier,
+)
 from repro.core.offloader import TaskOffloader  # noqa: F401
 from repro.core.rebalance import StripeRebalancer  # noqa: F401
 from repro.core.router import (  # noqa: F401

@@ -20,6 +20,7 @@ from typing import Callable, Dict, Optional, Set, Tuple
 
 from repro.core.blockdev import BLOCK_SIZE
 from repro.core.fs import Lease, OffloadFS
+from repro.core.memtier import MemTierNode
 
 
 @dataclass
@@ -118,11 +119,15 @@ class OffloadEngine:
 
     def __init__(self, fs: OffloadFS, *, node: str = "storage0",
                  cache_blocks: int = 4096, enable_cache: bool = True,
-                 max_inflight: int = 16):
+                 max_inflight: int = 16, memtier_blocks: int = 1024):
         self.fs = fs
         self.node = node
         self.cache = OffloadCache(cache_blocks)
         self.enable_cache = enable_cache
+        # remote-memory block-cache partition hosted in this node's DRAM
+        # (the MemTier pool's shard on this node): pure local store, wired
+        # onto the fabric by serve_engine; coherence is the initiator's job
+        self.memtier_node = MemTierNode(capacity_blocks=memtier_blocks)
         self._stubs: Dict[str, Callable] = {}
         self.busy_ns = 0  # accumulated simulated work units (DES hook)
         self.tasks_run = 0

@@ -271,6 +271,22 @@ class OffloadFS:
         self.migrations = 0
         self.migrated_blocks = 0
         self._migration_failpoint = None
+        # optional remote-memory block cache (repro.core.memtier.MemTier):
+        # consulted in the read path, fenced by every write-lease grant and
+        # invalidated on every free/trim path — attach_memtier() wires it
+        self.memtier = None
+
+    # -------------------------------------------------------- memory tier
+    def attach_memtier(self, tier) -> None:
+        """Attach a remote block-cache tier to the read path. The tier is
+        conservatively wiped on attach: this initiator cannot know which
+        invalidations a predecessor (crashed instance, failed-over peer)
+        still owed the pool, so a takeover inherits an EMPTY — therefore
+        trivially coherent — tier rather than a possibly-stale one."""
+        with self._lock:
+            self.memtier = tier
+        if tier is not None:
+            tier.reset()
 
     # --------------------------------------------------------------- clock
     def _tick(self) -> float:
@@ -416,6 +432,7 @@ class OffloadFS:
         ids; afterwards the blocks are writable by the initiator again."""
         with self._lock:
             tids = sorted(self._orphans)
+            fenced_blocks = set()
             for tid in tids:
                 lease = self._orphans.pop(tid)
                 lease.done = True
@@ -423,10 +440,16 @@ class OffloadFS:
                 for b in lease.write_blocks:
                     if self._leased_blocks.get(b) == tid:
                         del self._leased_blocks[b]
+                fenced_blocks.update(lease.write_blocks)
                 # no per-orphan release record: the single compact() below
                 # rewrites the area with only the still-outstanding grants
                 self.lease_journal.drop_outstanding(tid)
             if tids:
+                if self.memtier is not None:
+                    # a crashed initiator's orphans fence the cache tier the
+                    # same way they fence extents: the dead grantee may have
+                    # written any subset of these blocks
+                    self.memtier.fence(fenced_blocks)
                 self.lease_journal.compact()
             return tids
 
@@ -463,6 +486,21 @@ class OffloadFS:
         with self._lock:
             return self._inodes[self._names[path]]
 
+    def leased(self, path: str) -> bool:
+        """Is any block backing ``path`` under an outstanding lease (read
+        OR write)? Cache-eviction planes use this to SKIP in-use entries
+        instead of racing ``delete()``'s lease check."""
+        with self._lock:
+            inode = self._inodes[self._names[path]]
+            blocks = {
+                b for e in inode.extents
+                for b in range(e.block, e.block + e.nblocks)
+            }
+            if blocks & set(self._leased_blocks):
+                return True
+            return any(lease.read_blocks & blocks
+                       for lease in self._leases.values())
+
     def delete(self, path: str) -> None:
         with self._lock:
             ino = self._names[path]
@@ -475,6 +513,13 @@ class OffloadFS:
             self.extmgr.free(inode.extents)
             for e in inode.extents:
                 self.dev.trim(e.block, e.nblocks)
+            if self.memtier is not None:
+                # freed blocks can be re-allocated to another file: cached
+                # copies of the OLD bytes must not survive the trim
+                self.memtier.invalidate(
+                    b for e in inode.extents
+                    for b in range(e.block, e.block + e.nblocks)
+                )
 
     def rename(self, old: str, new: str) -> None:
         """POSIX-style rename: an existing destination is replaced and its
@@ -508,6 +553,8 @@ class OffloadFS:
                 self.extmgr.free(victim.extents)
                 for e in victim.extents:
                     self.dev.trim(e.block, e.nblocks)
+                if self.memtier is not None:
+                    self.memtier.invalidate(victim_blocks)
             ino = self._names.pop(old)
             self._names[new] = ino
             self._inodes[ino].path = new
@@ -547,6 +594,8 @@ class OffloadFS:
                 # or a crashed WAL that reused them could replay the stale
                 # record-encoded bytes as committed data on reopen
                 self.dev.trim(e.block, e.nblocks)
+            if self.memtier is not None:
+                self.memtier.invalidate(drop_blocks)
             inode.extents = keep
             inode.size = min(inode.size, size)
             inode.mtime = self._tick()
@@ -702,6 +751,11 @@ class OffloadFS:
                     self.extmgr.free(new_raw)
                     for e in new_raw:
                         self.dev.trim(e.block, e.nblocks)
+                    if self.memtier is not None:
+                        self.memtier.invalidate(
+                            b for e in new_raw
+                            for b in range(e.block, e.block + e.nblocks)
+                        )
                     raise
                 # past the commit point the swap is already durable: rolling
                 # back in memory would free blocks the on-disk superblock
@@ -709,10 +763,14 @@ class OffloadFS:
                 self.extmgr.free(old_extents)
                 for e in old_extents:
                     self.dev.trim(e.block, e.nblocks)
+                if self.memtier is not None:
+                    self.memtier.invalidate(src_blocks)
                 raise
             self.extmgr.free(old_extents)
             for e in old_extents:
                 self.dev.trim(e.block, e.nblocks)
+            if self.memtier is not None:
+                self.memtier.invalidate(src_blocks)
             self.migrations += 1
             self.migrated_blocks += nblocks
             return {
@@ -765,6 +823,13 @@ class OffloadFS:
             self._check_not_leased(
                 b for blk, n in runs for b in range(blk, blk + n)
             )
+            if self.memtier is not None:
+                # the covering blocks are about to be overwritten (locally
+                # or by a remote WAL append): drop any cached copies now so
+                # the unleased write path can never leave stale tier bytes
+                self.memtier.invalidate(
+                    b for blk, n in runs for b in range(blk, blk + n)
+                )
             inode.size = max(inode.size, end)
             inode.mtime = self._tick()
             if not lease:
@@ -775,7 +840,8 @@ class OffloadFS:
             )
             return runs, grant
 
-    def read(self, path: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+    def read(self, path: str, offset: int = 0, length: Optional[int] = None,
+             *, io_class: str = "foreground") -> bytes:
         with self._lock:
             inode = self._inodes[self._names[path]]
             if length is None:
@@ -795,7 +861,17 @@ class OffloadFS:
             skip = offset - first_blk * BLOCK_SIZE
             out = []
             for blk, n in self._extent_blocks(inode, offset, length):
-                out.append(self.dev.read_blocks(blk, n, node=self.node))
+                data = None
+                if self.memtier is not None:
+                    # remote-DRAM tier first: a full-run hit skips NVMe; a
+                    # miss reads the device and offers the run back (the
+                    # tier's admission filter decides whether to keep it)
+                    data = self.memtier.get_run(blk, n, io_class=io_class)
+                if data is None:
+                    data = self.dev.read_blocks(blk, n, node=self.node)
+                    if self.memtier is not None:
+                        self.memtier.fill_run(blk, n, data, io_class=io_class)
+                out.append(data)
             buf = b"".join(out)
             return buf[skip : skip + length]
 
@@ -839,6 +915,13 @@ class OffloadFS:
                             del self._leased_blocks[b]
                     self._leases.pop(tid, None)
                     raise
+                if self.memtier is not None:
+                    # the journaled grant fences cached copies too: the
+                    # grantee will write these blocks and the tier must not
+                    # serve the pre-write bytes afterwards (reads are
+                    # quiesced for the lease's lifetime, so nothing can
+                    # re-fill them until release)
+                    self.memtier.fence(wb)
             return lease
 
     def release_lease(self, lease: Lease) -> None:

@@ -50,6 +50,7 @@ from repro.core.admission import EwmaGauge
 from repro.core.blockdev import BLOCK_SIZE
 from repro.core.engine import OffloadEngine
 from repro.core.fs import Extent, Lease, OffloadFS
+from repro.core.memtier import serve_memtier
 from repro.core.rpc import RpcFabric, RpcFuture
 
 LB_POLICIES = ("round_robin", "least_outstanding", "admission_aware",
@@ -884,6 +885,7 @@ def serve_engine(engine: OffloadEngine, fabric: RpcFabric, policy,
             "pushdown_scans": engine.pushdown_scans,
             "pushdown_rows_in": engine.pushdown_rows_in,
             "pushdown_rows_out": engine.pushdown_rows_out,
+            "memtier": engine.memtier_node.counters(),
         }
 
     fabric.register(n, "admit", admit)
@@ -892,6 +894,9 @@ def serve_engine(engine: OffloadEngine, fabric: RpcFabric, policy,
     fabric.register(n, "submit_task", submit_task)
     fabric.register(n, "wal_append", wal_append)
     fabric.register(n, "ping", ping)
+    # remote-memory block-cache endpoints (repro.core.memtier): the pool
+    # shard living in this engine node's DRAM
+    serve_memtier(engine.memtier_node, fabric, n)
 
 
 def serve_engines(engines: Sequence[OffloadEngine], fabric: RpcFabric,

@@ -144,9 +144,23 @@ class ClusterRouter:
         self._hb_thread: Optional[threading.Thread] = None
         self._hb_stop: Optional[threading.Event] = None
         self.stats = RouterStats()
+        # optional remote-memory tier: its foreground MISS rate is folded
+        # into fleet_pressure (attach_memtier), so a cold or churning cache
+        # reads as load exactly like deep target queues do
+        self.memtier = None
+        self.memtier_pressure_weight = 1.0
         now = self._clock()
         for t in list(off.targets):  # adopt the offloader's initial set
             self.members[t] = Member(t, joined_at=now)
+
+    def attach_memtier(self, tier, *, weight: float = 1.0) -> None:
+        """Fold a MemTier's foreground miss rate into ``fleet_pressure``:
+        every foreground miss is NVMe + fabric work the targets are about
+        to absorb, so the router should see it as pressure before the
+        queue-depth EWMAs do."""
+        with self._lock:
+            self.memtier = tier
+            self.memtier_pressure_weight = weight
 
     def _logical_clock(self) -> float:
         self._t += 0.001
@@ -355,7 +369,15 @@ class ClusterRouter:
                     vals.append(g.value)  # never stamped: initiator-only view
                 else:
                     vals.append(g.aged_value(now, self.telemetry_half_life))
-            return sum(vals) / len(vals) if vals else 0.0
+            depth = sum(vals) / len(vals) if vals else 0.0
+            if self.memtier is not None:
+                # a cold/churning tier means the foreground read stream is
+                # about to land on NVMe: count the aged miss rate as load
+                hr = self.memtier.aged_hit_rate(
+                    "foreground", now, self.telemetry_half_life
+                )
+                depth += self.memtier_pressure_weight * (1.0 - hr)
+            return depth
 
     def overloaded(self) -> bool:
         return self.fleet_pressure() >= self.overload_threshold
@@ -489,7 +511,7 @@ class ClusterRouter:
 
 # ------------------------------------------------------------------ failover
 def standby_takeover(dev: BlockDevice, *, node: str = "standby0",
-                     shards: Optional[int] = None
+                     shards: Optional[int] = None, memtier=None
                      ) -> Tuple[OffloadFS, List[int]]:
     """Initiator failover: a standby re-mounts a dead initiator's volume.
 
@@ -500,8 +522,17 @@ def standby_takeover(dev: BlockDevice, *, node: str = "standby0",
     fences them: the journal is compacted, the blocks are writable again,
     and any straggler write from the old incarnation's targets dies on
     the ``_live_lease`` fence. Returns ``(fs, fenced_task_ids)``.
+
+    ``memtier`` (optional): the remote cache tier the standby inherits.
+    Attaching it WIPES it first (``attach_memtier``'s conservative reset —
+    the dead initiator may have owed the pool invalidations it never
+    sent), and orphan reclaim then fences the orphans' write sets through
+    the fresh tier like any other reclaim: the takeover can only inherit
+    a coherent cache.
     """
     kwargs = {} if shards is None else {"shards": shards}
     fs = OffloadFS.mount(dev, node=node, **kwargs)
+    if memtier is not None:
+        fs.attach_memtier(memtier)  # conservative wipe before first read
     fenced = fs.reclaim_orphans()
     return fs, fenced

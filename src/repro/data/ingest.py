@@ -129,9 +129,13 @@ class PrepPipeline:
                  batch: Optional[int] = None, epochs: Optional[int] = None,
                  seed: Optional[int] = None, shuffle: Optional[bool] = None,
                  window: int = 2, queue_depth: int = 2,
+                 adaptive_window: bool = False, max_window: int = 8,
+                 depth_low: float = 1.0, depth_high: float = 4.0,
                  state: Optional[IngestState] = None):
         if window < 1:
             raise ValueError("window must be >= 1")
+        if max_window < window:
+            raise ValueError("max_window must be >= window")
         self.prep = prep
         self.paths = list(paths)
         if state is None:
@@ -157,7 +161,20 @@ class PrepPipeline:
                     f"resume corpus mismatch: state has {state.n_images} "
                     f"images, got {len(self.paths)}")
             self.state = state
+        # in-flight window: static by default; with ``adaptive_window`` the
+        # producer drives it from the offloader's queue-depth EWMAs —
+        # additive increase while the targets run shallow (< depth_low
+        # smoothed tasks in flight per target), decrease while they run
+        # deep (> depth_high), clamped to [1, max_window]. Batch CONTENT
+        # never depends on the window (determinism contract above), only
+        # how far ahead the producer runs.
         self.window = window
+        self.adaptive_window = adaptive_window
+        self.max_window = max_window
+        self.depth_low = depth_low
+        self.depth_high = depth_high
+        self.window_min_seen = window
+        self.window_max_seen = window
         self._queue = _BoundedQueue(queue_depth)
         self._lock = threading.Lock()  # state + inflight manifest
         self._thread: Optional[threading.Thread] = None
@@ -182,6 +199,23 @@ class PrepPipeline:
         return self.state.seed * 1_000_003 + epoch * 8191 + bidx
 
     # --------------------------------------------------------- producer
+    def _adapt_window(self) -> int:
+        """One controller step: nudge ``self.window`` toward the depth
+        band and return it. Reads the offloader's smoothed per-target
+        in-flight depth — each minibatch puts ~1 share on each target, so
+        mean task depth IS the in-flight window the targets actually see."""
+        if not self.adaptive_window:
+            return self.window
+        depths = self.prep.off.queue_depth_ewma()
+        mean = sum(depths.values()) / len(depths) if depths else 0.0
+        if mean < self.depth_low and self.window < self.max_window:
+            self.window += 1  # targets are starving: run further ahead
+        elif mean > self.depth_high and self.window > 1:
+            self.window -= 1  # queues are deep: stop piling on
+        self.window_min_seen = min(self.window_min_seen, self.window)
+        self.window_max_seen = max(self.window_max_seen, self.window)
+        return self.window
+
     def _issue(self, epoch: int, bidx: int, order: np.ndarray) -> dict:
         """Issue minibatch ``bidx``'s remote shares through the streaming
         plane; the local share is deferred to assembly (it overlaps with
@@ -237,6 +271,7 @@ class PrepPipeline:
                 pending: deque = deque()
                 nxt = start
                 while nxt < nb or pending:
+                    self._adapt_window()
                     while (len(pending) < self.window and nxt < nb
                            and not self._stop.is_set()):
                         pending.append(self._issue(epoch, nxt, order))
@@ -320,7 +355,8 @@ class PrepPipeline:
 
     @classmethod
     def resume(cls, prep: OffloadPrep, paths: Sequence[str], db, *,
-               window: int = 2, queue_depth: int = 2) -> "PrepPipeline":
+               window: int = 2, queue_depth: int = 2,
+               adaptive_window: bool = False) -> "PrepPipeline":
         """Reconstruct the pipeline from the OffloadDB checkpoint: the
         next delivered batch is exactly the one the dead trainer would
         have received next. The checkpointed in-flight manifest (shares
@@ -330,8 +366,8 @@ class PrepPipeline:
         if state is None:
             raise KeyError("no ingest state checkpointed in this DB")
         state.inflight = []  # abandoned by the crash; producer re-issues
-        return cls(prep, paths, state=state,
-                   window=window, queue_depth=queue_depth)
+        return cls(prep, paths, state=state, window=window,
+                   queue_depth=queue_depth, adaptive_window=adaptive_window)
 
 
 def tokens_from_batch(batch: np.ndarray, vocab: int,

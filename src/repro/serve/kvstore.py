@@ -39,6 +39,7 @@ from __future__ import annotations
 import pickle
 import struct
 import threading
+import time
 import zlib
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -121,6 +122,9 @@ class KvEntry:
     # prefill's sampled first token (host array) — lets a warm decode skip
     # the prefill compute entirely, not just the cache build
     first: Optional[Any] = None
+    # LRU/TTL clock stamp (store clock, monotonic by default): refreshed on
+    # put and fetch, consulted by ``evict()``
+    last_used: float = 0.0
 
 
 @dataclass
@@ -133,6 +137,10 @@ class KvStoreStats:
     fetch_bytes: int = 0
     fetch_chunks: int = 0
     merge_runs: int = 0  # out-of-order completion runs merged per fetch
+    evictions: int = 0  # entries removed by the LRU/TTL sweep
+    evicted_bytes: int = 0  # replica bytes freed by eviction
+    expirations: int = 0  # evictions whose trigger was TTL, not capacity
+    evict_skipped_leased: int = 0  # victims skipped because a lease held them
 
 
 PLACEMENTS = ("prefix", "round_robin", "random")
@@ -147,10 +155,21 @@ class KvCacheStore:
 
     def __init__(self, fs: OffloadFS, *, router=None, off=None,
                  root: str = "kv", chunk_blocks: int = 8,
-                 placement: str = "prefix", seed: int = 0):
+                 placement: str = "prefix", seed: int = 0,
+                 capacity_bytes: Optional[int] = None,
+                 ttl_s: Optional[float] = None, clock=None):
         if placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {placement!r}")
         self.fs = fs
+        # LRU/TTL eviction plane: ``capacity_bytes`` caps the stored blob
+        # bytes (least-recently-used replicas go first), ``ttl_s`` expires
+        # idle entries outright. Eviction is delete → free → trim through
+        # ``fs.delete`` (its lease check is the fence); entries any lease
+        # still covers are SKIPPED, not raced. ``clock`` is injectable so
+        # tests drive TTL deterministically (defaults to time.monotonic).
+        self.capacity_bytes = capacity_bytes
+        self.ttl_s = ttl_s
+        self._clock = clock if clock is not None else time.monotonic
         self.router = router
         self.off = off if off is not None else (
             router.off if router is not None else None
@@ -244,6 +263,7 @@ class KvCacheStore:
             shard = self._place(t)
             entry = self._entries.get(key)
             if entry is not None and shard in entry.replicas:
+                entry.last_used = self._clock()  # a dedupe hit is a use
                 self.stats.dedupe_hits += 1
                 return {"key": key, "shard": shard, "deduped": True,
                         "bytes": 0}
@@ -274,10 +294,15 @@ class KvCacheStore:
                 entry = KvEntry(key, t, len(blob), len(chunks))
                 self._entries[key] = entry
             entry.replicas[shard] = base
+            entry.last_used = self._clock()
             if first_token is not None:
                 entry.first = np.asarray(first_token)
             self.stats.put_chunks += len(chunks)
             self.stats.put_bytes += len(blob)
+            # capacity back-pressure: evict colder entries before the
+            # catalog commit so one persist covers insert + eviction (the
+            # fresh entry itself is protected from its own sweep)
+            self._evict_locked(protect=key)
             self._persist_catalog()
             # commit point: a standby that takes the volume over must see
             # the chunk inodes + catalog of every completed put
@@ -293,6 +318,8 @@ class KvCacheStore:
         t = _norm_tokens(tokens)
         with self._lock:
             entry = self._entries.get(self._key(t))
+            if entry is not None:
+                entry.last_used = self._clock()  # LRU touch
         if entry is None or entry.tokens != t:
             return None
         shard = min(entry.replicas)
@@ -435,6 +462,77 @@ class KvCacheStore:
                 mk, mv = ops.merge_sorted(mk, mv, rk, rv)
             order = np.asarray(mv).tolist()
         return b"".join(datas[slot] for slot in order)
+
+    # ----------------------------------------------------------- eviction
+    def _stored_bytes_locked(self) -> int:
+        return sum(e.size * len(e.replicas) for e in self._entries.values())
+
+    def stored_bytes(self) -> int:
+        """Total replica bytes currently stored (what ``capacity_bytes``
+        caps)."""
+        with self._lock:
+            return self._stored_bytes_locked()
+
+    def _delete_entry_locked(self, entry: KvEntry) -> int:
+        """delete → free → trim every chunk file of every replica; the
+        blocks return to the allocator and the device TRIMs them (and the
+        MemTier, when attached, drops its cached copies on the same path).
+        Caller has verified no lease covers the entry."""
+        freed = 0
+        for _shard, base in sorted(entry.replicas.items()):
+            for k in range(entry.nchunks):
+                path = f"{base}/c{k}"
+                if self.fs.exists(path):
+                    self.fs.delete(path)
+            freed += entry.size
+        del self._entries[entry.key]
+        return freed
+
+    def _evict_locked(self, *, now: Optional[float] = None,
+                      protect: Optional[str] = None) -> List[str]:
+        if self.capacity_bytes is None and self.ttl_s is None:
+            return []
+        now = self._clock() if now is None else now
+        victims: List[str] = []
+        # coldest first; once an entry is neither expired nor needed for
+        # capacity, no younger entry can be either — stop there
+        for e in sorted(self._entries.values(), key=lambda e: e.last_used):
+            if e.key == protect:
+                continue
+            expired = (self.ttl_s is not None
+                       and now - e.last_used >= self.ttl_s)
+            over = (self.capacity_bytes is not None
+                    and self._stored_bytes_locked() > self.capacity_bytes)
+            if not (expired or over):
+                break
+            leased = any(
+                self.fs.exists(p) and self.fs.leased(p)
+                for _shard, base in e.replicas.items()
+                for p in (f"{base}/c{k}" for k in range(e.nchunks))
+            )
+            if leased:
+                # a decode stream (or an in-flight store) still holds the
+                # blocks: eviction never races a lease, it skips
+                self.stats.evict_skipped_leased += 1
+                continue
+            freed = self._delete_entry_locked(e)
+            self.stats.evictions += 1
+            self.stats.evicted_bytes += freed
+            if expired:
+                self.stats.expirations += 1
+            victims.append(e.key)
+        return victims
+
+    def evict(self, *, now: Optional[float] = None) -> List[str]:
+        """One LRU/TTL sweep; returns the evicted entry keys. An evicted
+        prompt simply misses on its next ``fetch`` — the caller recomputes
+        prefill and re-stores, byte-identical to the evicted copy."""
+        with self._lock:
+            victims = self._evict_locked(now=now)
+            if victims:
+                self._persist_catalog()
+                self.fs.flush_metadata()
+        return victims
 
     # ------------------------------------------------------------ queries
     def first_token(self, tokens):

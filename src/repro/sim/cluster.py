@@ -53,6 +53,10 @@ class TestbedSpec:
     preprocess_rate: float = 25.0  # images/s/core
     kv_cpu_per_op: float = 12e-6  # initiator CPU per KV op (s)
     lease_replay_cpu: float = 2e-6  # per journaled lease record on re-mount
+    # remote-memory tier (MemTier): per-target DRAM service bandwidth for
+    # cache hits/fills — an order of magnitude over the NVMe read path is
+    # what makes the second tier worth the fabric crossing
+    dram_bw: float = 40.0 * GB
     # trainer step consumption (accelerator, NOT the preprocessing cores):
     # images/s one initiator's training step sinks — the consumer stage the
     # PrepPipeline overlaps prep/transfer against
@@ -108,6 +112,11 @@ class Cluster:
         # scalability limit; near-data tasks bypass it (SPDK direct)
         self.posvol_t: List[Resource] = [
             sim.resource(f"posvol{t}", spec.posvol_bw) for t in range(n_storage)
+        ]
+        # per-target DRAM FIFO for the remote-memory cache tier (MemTier):
+        # hits and fills serve from here, never touching the NVMe FIFOs
+        self.dram_t: List[Resource] = [
+            sim.resource(f"dram{t}", spec.dram_bw) for t in range(n_storage)
         ]
         # target-0 aliases (back-compat for single-storage scenarios)
         self.cpu_s = self.cpu_s_t[0]
@@ -230,6 +239,32 @@ class Cluster:
         wire = selectivity * table_bytes + (1.0 - selectivity) * n_rows * key_bytes
         yield from self.net_transfer(initiator, wire, target=target)
         yield ("use", self.cpu_i[initiator], wire / self.spec.merge_rate)
+
+    def cache_get(self, initiator: int, nbytes: float, *, target: int = 0):
+        """Remote-DRAM cache hit (MemTier): one RPC round trip, the home
+        node's DRAM FIFO, and the wire back — no NVMe read, no PoseidonOS
+        reactor crossing. The latency gap between this and
+        ``storage_read`` is the whole second-tier story."""
+        yield ("delay", self.spec.rpc_rtt)
+        yield ("use", self.dram_t[target], nbytes)
+        yield from self.net_transfer(initiator, nbytes, target=target)
+
+    def cache_fill(self, initiator: int, nbytes: float, *, target: int = 0):
+        """Miss-path fill: the run just read from NVMe is offered back to
+        its home node — one RPC, the bytes over the wire, a DRAM write.
+        The admission filter's bookkeeping is free at this grain; a
+        rejected offer pays the same wire cost (the bytes travel before
+        the ghost list votes)."""
+        yield ("delay", self.spec.rpc_rtt)
+        yield from self.net_transfer(initiator, nbytes, target=target)
+        yield ("use", self.dram_t[target], nbytes)
+
+    def cache_invalidate(self, initiator: int, n_blocks: int, *,
+                         target: int = 0):
+        """Lease fence / free-path invalidation: one RPC carrying block
+        ids only (~64 B each) — coherence traffic never moves data."""
+        yield from self.rpc(initiator, 64.0 * max(1, n_blocks),
+                            target=target)
 
     def train_consume(self, initiator: int, n_images: float):
         """The trainer sinks one prepped minibatch (strictly FIFO: the

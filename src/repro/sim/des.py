@@ -75,6 +75,7 @@ class Sim:
         self._q: List[_Event] = []
         self._seq = itertools.count()
         self.resources: Dict[str, Resource] = {}
+        self.events = 0  # events processed (fleet-sweep scale reporting)
 
     def resource(self, name: str, rate: float, servers: int = 1) -> Resource:
         r = Resource(self, name, rate, servers)
@@ -95,6 +96,7 @@ class Sim:
                 self.now = until
                 return self.now
             self.now = ev.t
+            self.events += 1
             gen, h = ev.proc
             try:
                 req = gen.send(ev.value)

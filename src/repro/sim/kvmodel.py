@@ -33,10 +33,12 @@ Mechanics (why the paper's effects emerge here):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 from repro.core.admission import AcceptAll, AdmissionPolicy
+from repro.core.memtier import MemTierNode
 from repro.sim.cluster import Cluster, TestbedSpec, TESTBED
 from repro.sim.des import Sim
 
@@ -542,4 +544,189 @@ def run_serve(params: ServeParams, *, spec: TestbedSpec = TESTBED) -> ServeResul
         hit_rate=counters["hits"] / total if total else 0.0,
         net_bytes=counters["net"],
         makespan=makespan,
+    )
+
+# ===================================================================
+# MemTier fleet sweep (Fig. 22): the remote-memory block-cache tier at
+# fleet scale — hundreds of storage nodes, thousands of tenants.
+#
+# The functional layer (repro.core.memtier.MemTierNode) makes the CACHE
+# DECISIONS — per-partition LRU, ghost-list admission, invalidation —
+# while the DES charges the TIME: a hit pays one RPC + the home node's
+# DRAM FIFO + the wire; a miss pays the full NVMe + PoseidonOS + wire
+# path and a fill offer back to the tier; a write fences its run (block
+# ids only on the wire) before landing on NVMe. Load is zipf-popular
+# per-tenant working sets under diurnal modulation (think time swells
+# and shrinks with a deterministic function of SIM time — no wall
+# clock), plus a configurable share of one-pass background scanners the
+# admission filter must keep out of the foreground partitions.
+# ===================================================================
+
+
+@dataclass
+class MemTierParams:
+    n_tenants: int = 1000
+    n_storage: int = 128
+    n_clients: int = 8  # initiator nodes the tenants multiplex onto
+    ops_per_tenant: int = 30
+    blocks_per_run: int = 32  # 128 KiB reads
+    runs_per_tenant: int = 32  # hot working set, in runs
+    zipf_s: float = 1.2  # run popularity skew within a tenant's set
+    write_ratio: float = 0.1  # writes → fence + NVMe, never the tier
+    scan_tenants: float = 0.1  # fraction doing one-pass background scans
+    tier: bool = True  # False = NVMe-only baseline
+    tier_runs_per_node: int = 1024  # home-node partition capacity (runs)
+    think_base: float = 10e-3  # mean tenant think time (s)
+    diurnal_amp: float = 0.6  # think-time swing (0 = flat load)
+    diurnal_period: float = 4.0  # sim-seconds per synthetic "day"
+    # per-op device latency (NOT bandwidth — the FIFOs model that): the
+    # DRAM-vs-flash latency gap is the second tier's whole argument
+    nvme_latency: float = 90e-6
+    dram_latency: float = 2e-6
+
+
+@dataclass
+class MemTierResult:
+    hit_rate: float
+    scan_hit_rate: float  # background partition (should stay near zero)
+    latencies: List[float] = field(default_factory=list)
+    makespan: float = 0.0
+    events: int = 0  # DES events processed (fleet-scale evidence)
+    n_storage: int = 0
+    n_tenants: int = 0
+    net_bytes: float = 0.0
+    invalidations: int = 0
+
+    @property
+    def mean_latency(self) -> float:
+        return sum(self.latencies) / len(self.latencies) if self.latencies else 0.0
+
+    @property
+    def p99_latency(self) -> float:
+        s = sorted(self.latencies)
+        return s[min(len(s) - 1, int(len(s) * 0.99))] if s else 0.0
+
+
+def run_memtier(params: MemTierParams, *,
+                spec: TestbedSpec = TESTBED) -> MemTierResult:
+    sim = Sim()
+    n_storage = max(1, params.n_storage)
+    cl = Cluster(sim, spec, n_initiators=params.n_clients,
+                 n_storage=n_storage)
+    run_bytes = params.blocks_per_run * 4096.0
+    # one functional cache shard per storage node: real LRU + ghost-list
+    # admission + partition isolation, driven block-for-block by the model
+    nodes: List[MemTierNode] = [
+        MemTierNode(capacity_blocks=params.tier_runs_per_node)
+        for _ in range(n_storage)
+    ]
+
+    # per-tenant zipf CDF over its working-set runs (shared shape)
+    w = [(k + 1) ** -params.zipf_s for k in range(params.runs_per_tenant)]
+    tot = sum(w)
+    cdf, acc = [], 0.0
+    for x in w:
+        acc += x / tot
+        cdf.append(acc)
+
+    def xorshift(x: int) -> int:
+        x ^= (x << 13) & 0xFFFFFFFF
+        x ^= x >> 17
+        x ^= (x << 5) & 0xFFFFFFFF
+        return x or 1
+
+    counters: Dict[str, float] = {
+        "fg_hits": 0, "fg_gets": 0, "bg_hits": 0, "bg_gets": 0,
+        "net": 0.0, "inval": 0,
+    }
+    latencies: List[float] = []
+    n_scan = int(params.n_tenants * params.scan_tenants)
+
+    def _near_data_fill(home: int):
+        """Admitted fill: the home node copies the run it just served
+        from its own NVMe slice into its DRAM partition — SPDK-direct
+        background work, never on the foreground path or the wire."""
+        yield ("use", cl.nvme_r_t[home], run_bytes)
+        yield ("use", cl.dram_t[home], run_bytes)
+
+    def tenant(t: int):
+        rng = xorshift(0x9E3779B9 ^ (t + 1))
+        scanner = t < n_scan
+        io_class = "background" if scanner else "foreground"
+        base = t * params.runs_per_tenant
+        for op in range(params.ops_per_tenant):
+            # diurnal think time: a deterministic function of SIM time and
+            # the tenant's timezone phase — load swells and ebbs fleet-wide
+            phase = 2.0 * math.pi * (
+                sim.now / params.diurnal_period + t / params.n_tenants
+            )
+            think = params.think_base * (
+                1.0 + params.diurnal_amp * math.cos(phase)
+            )
+            rng = xorshift(rng)
+            yield ("delay", think * (0.5 + rng / 0xFFFFFFFF))
+            if scanner:
+                run = base + op % params.runs_per_tenant  # one-pass sweep
+            else:
+                rng = xorshift(rng)
+                u = rng / 0xFFFFFFFF
+                run = base + next(
+                    (k for k, c in enumerate(cdf) if u <= c),
+                    params.runs_per_tenant - 1,
+                )
+            home = run % n_storage
+            init = t % params.n_clients
+            rng = xorshift(rng)
+            write = (rng / 0xFFFFFFFF) < params.write_ratio and not scanner
+            t0 = sim.now
+            if write:
+                # lease fence first (ids only), then the NVMe write
+                if params.tier:
+                    nodes[home].invalidate([run])
+                    counters["inval"] += 1
+                    yield from cl.cache_invalidate(
+                        init, params.blocks_per_run, target=home)
+                yield ("delay", params.nvme_latency)
+                yield from cl.storage_write(init, run_bytes, target=home)
+                counters["net"] += run_bytes
+            else:
+                key = "bg" if scanner else "fg"
+                counters[key + "_gets"] += 1
+                hit = params.tier and \
+                    nodes[home].get(io_class, run) is not None
+                if hit:
+                    counters[key + "_hits"] += 1
+                    yield ("delay", params.dram_latency)
+                    yield from cl.cache_get(init, run_bytes, target=home)
+                else:
+                    # the request RPC is paid either way; the miss then
+                    # waits out the flash access and drains the full
+                    # NVMe + PoseidonOS + wire path
+                    yield from cl.rpc(init, 4096, target=home)
+                    yield ("delay", params.nvme_latency)
+                    yield from cl.storage_read(init, run_bytes, target=home)
+                    if params.tier and nodes[home].put(io_class, run,
+                                                       b"\x01"):
+                        # admitted: the home node captures the run it just
+                        # served, near-data in the background (no second
+                        # wire crossing, no foreground wait)
+                        sim.spawn(_near_data_fill(home))
+                counters["net"] += run_bytes
+            latencies.append(sim.now - t0)
+
+    for t in range(params.n_tenants):
+        sim.spawn(tenant(t))
+    makespan = sim.run()
+    return MemTierResult(
+        hit_rate=(counters["fg_hits"] / counters["fg_gets"]
+                  if counters["fg_gets"] else 0.0),
+        scan_hit_rate=(counters["bg_hits"] / counters["bg_gets"]
+                       if counters["bg_gets"] else 0.0),
+        latencies=latencies,
+        makespan=makespan,
+        events=sim.events,
+        n_storage=n_storage,
+        n_tenants=params.n_tenants,
+        net_bytes=counters["net"],
+        invalidations=int(counters["inval"]),
     )

@@ -1,0 +1,153 @@
+"""Shared MemTier coherence schedule for test_property.py (hypothesis)
+and test_invariants_fallback.py (seeded pure-pytest mirror).
+
+THE cache-coherence invariant (PR 10): with a MemTier attached, a read
+through ``OffloadFS`` is byte-identical to what a direct NVMe read would
+return, after ANY interleaving of writes, overwrites, truncates, deletes,
+stripe migrations (including mid-migration crashes + standby takeover),
+journaled-orphan crash reclaim, and cache-node kill/revive-with-stale-DRAM
+— and the run leaks no lease. The shadow model is a plain dict path →
+bytes; every read op checks the FS against it.
+"""
+import random
+from typing import Dict
+
+from repro.core import (BlockDevice, FaultyFabric, MemTier, OffloadFS,
+                        OffloadEngine, standby_takeover)
+from repro.core.admission import AcceptAll
+from repro.core.blockdev import BLOCK_SIZE
+from repro.core.fs import MigrationCrash
+from repro.core.offloader import serve_engine
+
+N_CACHE_NODES = 3
+SHARDS = 2
+IO_CLASSES = ("foreground", "pushdown", "background")
+
+
+def _build(rng: random.Random):
+    dev = BlockDevice(1 << 14)
+    fs = OffloadFS(dev, node="init0", shards=SHARDS)
+    fabric = FaultyFabric(seed=rng.randrange(1 << 30))
+    names = [f"storage{t}" for t in range(N_CACHE_NODES)]
+    for name in names:
+        serve_engine(OffloadEngine(fs, node=name, enable_cache=False),
+                     fabric, AcceptAll())
+    tier = MemTier(fabric, names, node="init0")
+    fs.attach_memtier(tier)
+    return dev, fs, fabric, names, tier
+
+
+def _payload(rng: random.Random, nblocks: int) -> bytes:
+    return bytes([rng.randrange(1, 256)]) * (nblocks * BLOCK_SIZE)
+
+
+def run_memtier_schedule(rng: random.Random) -> None:
+    dev, fs, fabric, names, tier = _build(rng)
+    model: Dict[str, bytes] = {}
+    killed = set()
+    nfile = 0
+
+    def check(path: str) -> None:
+        got = fs.read(path, io_class=rng.choice(IO_CLASSES))
+        assert got == model[path], (
+            f"stale read of {path}: got {got[:8]!r}.. "
+            f"want {model[path][:8]!r}.."
+        )
+
+    for _ in range(rng.randrange(40, 80)):
+        op = rng.random()
+        paths = sorted(model)
+        nonempty = [p for p in paths if model[p]]
+        if op < 0.30 or not paths:
+            # write: fresh file, or overwrite an existing one in place —
+            # ceil-block length so the replacement fully covers the old
+            # bytes and the shadow stays a plain dict assignment
+            if paths and rng.random() < 0.5:
+                p = rng.choice(paths)
+                nbl = max(1, (len(model[p]) + BLOCK_SIZE - 1) // BLOCK_SIZE)
+            else:
+                p = f"/f{nfile}"
+                nfile += 1
+                fs.create(p)
+                nbl = rng.randrange(1, 5)
+            data = _payload(rng, nbl)
+            fs.write(p, data)
+            model[p] = data
+        elif op < 0.50:
+            # read-heavy phase: warm the tier, then check coherence (two
+            # touches pass the ghost filter, the third is a cache hit)
+            p = rng.choice(paths)
+            for _ in range(rng.randrange(1, 4)):
+                check(p)
+        elif op < 0.58:
+            p = rng.choice(paths)
+            fs.delete(p)
+            del model[p]
+        elif op < 0.66:
+            p = rng.choice(paths)
+            keep = rng.randrange(0, len(model[p]) + 1)
+            fs.truncate(p, keep)
+            model[p] = model[p][:keep]
+        elif op < 0.76 and nonempty:
+            # stripe migration, sometimes crashing at a random stage; the
+            # takeover must fence the orphaned copy lease AND the tier
+            p = rng.choice(nonempty)
+            # same-shard migration is a re-pin no-op (no failpoints fire):
+            # always move to a shard the file is NOT fully on
+            cur = fs.stat(p).extents[0].shard
+            dst = (cur + 1 + rng.randrange(SHARDS - 1)) % SHARDS
+            stage = rng.choice((None, None, "pre_copy", "post_copy",
+                                "post_swap"))
+            if stage is None:
+                fs.migrate_file(p, dst)
+            else:
+                fs.flush_metadata()  # the standby replays flushed metadata
+
+                def _fp(s, _want=stage):
+                    if s == _want:
+                        raise MigrationCrash(s)
+                fs._migration_failpoint = _fp
+                try:
+                    fs.migrate_file(p, dst)
+                    raise AssertionError("failpoint did not fire")
+                except MigrationCrash:
+                    pass
+                finally:
+                    fs._migration_failpoint = None
+                fs, fenced = standby_takeover(
+                    dev, node="standby0", shards=SHARDS, memtier=tier)
+                assert fenced, "mid-migration crash left no orphan to fence"
+                assert not fs.orphan_leases()
+        elif op < 0.82 and nonempty:
+            # initiator dies holding a journaled write lease (no mutation
+            # happened under it) — takeover fences it, tier wiped
+            p = rng.choice(nonempty)
+            fs.flush_metadata()
+            # reprolint: allow[lease-raw] deliberate orphan: schedule asserts takeover fences it
+            fs.grant_lease((), fs.stat(p).extents)
+            fs, fenced = standby_takeover(
+                dev, node="standby0", shards=SHARDS, memtier=tier)
+            assert len(fenced) == 1 and not fs._leases
+        elif op < 0.91:
+            cand = [n for n in names if n not in killed]
+            if cand:
+                victim = rng.choice(cand)
+                fabric.kill(victim)  # node keeps its (soon stale) DRAM
+                killed.add(victim)
+        else:
+            if killed:
+                back = rng.choice(sorted(killed))
+                fabric.revive(back)  # revives WITH pre-kill cache state
+                killed.discard(back)
+    for n in sorted(killed):
+        fabric.revive(n)
+    # final sweep: every file byte-identical through every I/O class,
+    # enough touches that the hot ones are served from the tier
+    for p in sorted(model):
+        for io_class in IO_CLASSES:
+            assert fs.read(p, io_class=io_class) == model[p]
+    # direct-NVMe ground truth: detach the tier and compare
+    fs.memtier = None
+    for p in sorted(model):
+        assert fs.read(p) == model[p]
+    assert not fs._leases, "schedule leaked a lease"

@@ -352,3 +352,15 @@ def test_pushdown_verifier_total_on_junk(seed):
     from pushdown_util import fuzz_verifier_round
 
     fuzz_verifier_round(random.Random(seed))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_memtier_schedule_never_serves_stale_bytes(seed):
+    """Fixed-seed mirror of test_property.py::
+    test_memtier_schedule_never_serves_stale_bytes — a MemTier-attached
+    read stays byte-identical to the direct NVMe read under any
+    interleaving of writes, truncates, deletes, (crashing) migrations,
+    orphan reclaims and cache-node kill/revive; no leaked leases."""
+    from memtier_util import run_memtier_schedule
+
+    run_memtier_schedule(random.Random(seed))

@@ -313,3 +313,71 @@ if __name__ == "__main__":
         _run_serving_child(sys.argv[2])
     else:  # pragma: no cover - convenience direct run
         sys.exit(pytest.main([__file__, "-q"]))
+
+
+# ---------------------------------------------------- LRU/TTL eviction
+def test_lru_eviction_caps_bytes_and_recomputes_identical():
+    clock = [0.0]
+    dev = BlockDevice(num_blocks=1 << 15)
+    fs = OffloadFS(dev, node="init0", shards=2)
+    cache = small_cache()
+    one = KvCacheStore(fs, root="probe", chunk_blocks=2).put(
+        [0, 1], cache)["bytes"]  # blob bytes of one stored entry
+    store = KvCacheStore(fs, root="kv", chunk_blocks=2,
+                         capacity_bytes=int(one * 2.5),
+                         clock=lambda: clock[0])
+    for i in range(4):
+        clock[0] = float(i)
+        store.put([i, i + 1], cache)
+    # capacity held: coldest entries were deleted → freed → trimmed
+    assert store.stored_bytes() <= int(one * 2.5)
+    assert store.stats.evictions >= 1
+    assert store.fetch([0, 1]) is None  # LRU victim misses
+    got = store.fetch([3, 4])  # newest survives byte-exact
+    assert caches_equal(cache, got)
+    # the recompute path: re-store the victim, byte-identical again
+    clock[0] = 10.0
+    store.put([0, 1], cache)
+    assert caches_equal(cache, store.fetch([0, 1]))
+    assert not fs._leases
+
+
+def test_ttl_expiry_and_fetch_refreshes_lru():
+    clock = [0.0]
+    dev = BlockDevice(num_blocks=1 << 15)
+    fs = OffloadFS(dev, node="init0", shards=2)
+    cache = small_cache()
+    store = KvCacheStore(fs, chunk_blocks=2, ttl_s=5.0,
+                         clock=lambda: clock[0])
+    store.put([1, 1], cache)
+    clock[0] = 4.0
+    store.put([2, 2], cache)
+    assert caches_equal(cache, store.fetch([1, 1]))  # touch refreshes LRU
+    clock[0] = 8.0  # [1,1] used at t=4, [2,2] at t=4: neither expired
+    assert store.evict() == []
+    clock[0] = 9.5  # both idle > ttl now
+    victims = store.evict()
+    assert len(victims) == 2 and store.stats.expirations == 2
+    assert store.fetch([1, 1]) is None and store.fetch([2, 2]) is None
+    assert not store.entries()
+    assert not fs._leases
+
+
+def test_eviction_skips_leased_entries():
+    clock = [0.0]
+    dev = BlockDevice(num_blocks=1 << 15)
+    fs = OffloadFS(dev, node="init0", shards=2)
+    cache = small_cache()
+    store = KvCacheStore(fs, chunk_blocks=2, ttl_s=1.0,
+                         clock=lambda: clock[0])
+    store.put([5, 5], cache)
+    entry = store.entries()[0]
+    base = entry.replicas[min(entry.replicas)]
+    clock[0] = 100.0  # way past TTL
+    with fs.read_lease(f"{base}/c0"):
+        assert store.evict() == []  # a decode stream still holds it
+        assert store.stats.evict_skipped_leased >= 1
+        assert caches_equal(cache, store.fetch([5, 5]))
+    clock[0] = 200.0  # the fetch refreshed the LRU stamp: idle out again
+    assert store.evict() == [entry.key]  # lease gone → eviction proceeds
+    assert not fs._leases

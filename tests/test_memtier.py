@@ -1,0 +1,198 @@
+"""MemTier unit tests: admission filtering, partition isolation, LRU
+eviction, lease fencing, the taint protocol, and the router pressure hook.
+The property-level coherence invariant lives in tests/test_property.py +
+tests/test_invariants_fallback.py (via tests/memtier_util.py); these pin
+the mechanism piece by piece. The CI ``cache-smoke`` job runs exactly this
+file plus the fig22 smoke."""
+import pytest
+
+from repro.core import (BlockDevice, FaultyFabric, MemTier, MemTierNode,
+                        OffloadEngine, OffloadFS, TaskOffloader,
+                        standby_takeover)
+from repro.core.admission import AcceptAll
+from repro.core.blockdev import BLOCK_SIZE
+from repro.core.fs import LeaseViolation
+from repro.core.offloader import serve_engine
+from repro.core.router import ClusterRouter
+
+
+def build_plane(n=2, *, memtier_blocks=64, shards=2):
+    dev = BlockDevice(1 << 14)
+    fs = OffloadFS(dev, node="init0", shards=shards)
+    fabric = FaultyFabric(seed=9)
+    engines = []
+    for t in range(n):
+        eng = OffloadEngine(fs, node=f"storage{t}",
+                            memtier_blocks=memtier_blocks)
+        serve_engine(eng, fabric, AcceptAll())
+        engines.append(eng)
+    tier = MemTier(fabric, [e.node for e in engines], node="init0")
+    return dev, fs, fabric, engines, tier
+
+
+# ------------------------------------------------------------- node-local
+def test_ghost_admission_needs_second_touch():
+    node = MemTierNode(capacity_blocks=8)
+    assert node.put("foreground", 1, b"a") is False  # first touch → ghost
+    assert node.get("foreground", 1) is None
+    assert node.put("foreground", 1, b"a") is True  # second touch → admit
+    assert node.get("foreground", 1) == b"a"
+    c = node.counters()
+    assert c["rejected"] == 1 and c["admitted"] == 1
+
+
+def test_lru_evicts_coldest_within_partition():
+    node = MemTierNode(capacity_blocks=2)
+    for b in (1, 2, 3):
+        node.put("foreground", b, b"x")  # ghost pass
+    for b in (1, 2, 3):
+        assert node.put("foreground", b, b"x")
+    assert len(node) == 2  # capacity held
+    assert node.get("foreground", 1) is None  # coldest went first
+    assert node.get("foreground", 3) == b"x"
+    assert node.counters()["evictions"] == 1
+
+
+def test_partitions_do_not_interfere():
+    node = MemTierNode(capacity_blocks=2)
+    for _ in range(2):
+        node.put("foreground", 1, b"f")
+    for b in range(2, 30):  # background flood, way over capacity
+        node.put("background", b, b"g")
+        node.put("background", b, b"g")
+    assert node.get("foreground", 1) == b"f"  # survived the flood
+
+
+def test_invalidate_hits_all_partitions_and_is_idempotent():
+    node = MemTierNode(capacity_blocks=8)
+    for part in ("foreground", "background"):
+        node.put(part, 5, b"v")
+        node.put(part, 5, b"v")
+    assert node.invalidate([5, 6]) == 2  # one copy per partition
+    assert node.invalidate([5, 6]) == 0  # idempotent
+    assert node.get("foreground", 5) is None
+    assert node.get("background", 5) is None
+
+
+# ----------------------------------------------------------- fs coherence
+def test_read_fills_and_hits_through_fs():
+    dev, fs, fabric, engines, tier = build_plane()
+    fs.attach_memtier(tier)
+    fs.create("/a")
+    data = b"\x07" * (2 * BLOCK_SIZE)
+    fs.write("/a", data)
+    assert fs.read("/a") == data  # miss → fill rejected (ghost)
+    assert fs.read("/a") == data  # miss → admitted
+    before = tier.stats()["hits"]
+    assert fs.read("/a") == data  # hit
+    assert tier.stats()["hits"] - before == 2  # both blocks from the tier
+
+
+def test_write_lease_grant_fences_cached_copies():
+    dev, fs, fabric, engines, tier = build_plane()
+    fs.attach_memtier(tier)
+    fs.create("/a")
+    fs.write("/a", b"\x01" * BLOCK_SIZE)
+    for _ in range(3):
+        fs.read("/a")  # cached now
+    with fs.write_lease("/a") as lease:
+        assert tier.stats()["fences"] >= 1  # grant fenced the copies
+        blk = lease.runs[0][0]
+        fs.authorized_write(lease, blk, b"\x02" * BLOCK_SIZE,
+                            node="storage0")
+        with pytest.raises(LeaseViolation):
+            fs.read("/a")  # quiesced for the lease lifetime
+    assert fs.read("/a") == b"\x02" * BLOCK_SIZE  # post-release: new bytes
+
+
+def test_delete_and_truncate_invalidate_cached_blocks():
+    dev, fs, fabric, engines, tier = build_plane()
+    fs.attach_memtier(tier)
+    fs.create("/a")
+    fs.write("/a", b"\x03" * (3 * BLOCK_SIZE))
+    for _ in range(3):
+        fs.read("/a")
+    inv0 = tier.stats()["invalidated_blocks"]
+    fs.truncate("/a", BLOCK_SIZE)
+    assert tier.stats()["invalidated_blocks"] - inv0 == 2
+    fs.delete("/a")
+    assert tier.stats()["invalidated_blocks"] - inv0 == 3
+    # re-use of the freed blocks can never surface the old bytes
+    fs.create("/b")
+    fs.write("/b", b"\x04" * (3 * BLOCK_SIZE))
+    for _ in range(3):
+        assert fs.read("/b") == b"\x04" * (3 * BLOCK_SIZE)
+
+
+def test_taint_protocol_survives_kill_and_stale_revive():
+    dev, fs, fabric, engines, tier = build_plane()
+    fs.attach_memtier(tier)
+    fs.create("/a")
+    fs.write("/a", b"\x05" * BLOCK_SIZE)
+    for _ in range(3):
+        fs.read("/a")
+    victim = tier.home(fs.stat("/a").extents[0].block)
+    fabric.kill(victim)
+    fs.write("/a", b"\x06" * BLOCK_SIZE)  # invalidation can't reach it
+    assert tier.stats()["tainted"] == [victim]
+    fabric.revive(victim)  # revives WITH the stale \x05 cache entry
+    # tainted node serves nothing until a put wipes it (reset-before-put)
+    assert fs.read("/a") == b"\x06" * BLOCK_SIZE
+    assert fs.read("/a") == b"\x06" * BLOCK_SIZE
+    assert not tier.tainted_nodes()
+    assert tier.stats()["resets"] >= 1
+
+
+def test_attach_memtier_wipes_conservatively():
+    dev, fs, fabric, engines, tier = build_plane()
+    node = engines[0].memtier_node
+    node.put("foreground", 3, b"zz")
+    node.put("foreground", 3, b"zz")
+    assert len(node) == 1
+    fs.attach_memtier(tier)  # standby semantics: reset everything
+    assert len(node) == 0
+    assert node.counters()["resets"] == 1
+
+
+def test_standby_takeover_inherits_and_fences_tier():
+    dev, fs, fabric, engines, tier = build_plane()
+    fs.attach_memtier(tier)
+    fs.create("/a")
+    fs.write("/a", b"\x08" * BLOCK_SIZE)
+    for _ in range(3):
+        fs.read("/a")
+    fs.flush_metadata()
+    # reprolint: allow[lease-raw] deliberate orphan: the takeover below must fence it
+    fs.grant_lease((), fs.stat("/a").extents)
+    fences0 = tier.stats()["fences"]
+    fs2, fenced = standby_takeover(dev, shards=2, memtier=tier)
+    assert len(fenced) == 1 and not fs2._leases
+    assert fs2.memtier is tier
+    assert tier.stats()["resets"] >= len(engines)  # conservative wipe
+    assert tier.stats()["fences"] > fences0  # orphan reclaim fenced too
+    assert fs2.read("/a") == b"\x08" * BLOCK_SIZE
+
+
+# ------------------------------------------------------------ router hook
+def test_router_folds_miss_rate_into_fleet_pressure():
+    dev, fs, fabric, engines, tier = build_plane()
+    fs.attach_memtier(tier)
+    off = TaskOffloader(fs, fabric, node="init0",
+                        targets=[e.node for e in engines])
+    clock = {"t": 0.0}
+
+    def tick():
+        clock["t"] += 0.001
+        return clock["t"]
+
+    router = ClusterRouter(off, clock=tick)
+    base = router.fleet_pressure()
+    router.attach_memtier(tier, weight=2.0)
+    # all-miss tier: pressure rises by weight * (1 - hit_rate) = 2.0
+    fs.create("/a")
+    fs.write("/a", b"\x09" * BLOCK_SIZE)
+    fs.read("/a")  # miss (ghost)
+    assert router.fleet_pressure() > base
+    for _ in range(40):
+        fs.read("/a")  # hits drive the EWMA up, pressure back down
+    assert router.fleet_pressure() < base + 2.0 * 0.5

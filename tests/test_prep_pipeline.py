@@ -409,3 +409,62 @@ def test_tokens_from_batch_deterministic_and_bounded():
     assert a["tokens"].shape == (4, 32) and a["labels"].shape == (4, 32)
     assert a["tokens"].min() >= 0 and a["tokens"].max() < 512
     assert np.array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+# ------------------------------------------------------ adaptive window
+def test_adaptive_window_controller_tracks_queue_depth():
+    dev, fs, fabric, engines, off = build_plane(2)
+    prep = make_prep(fs, off)
+    paths = prep.materialize_corpus(8, max_side=64)
+    pipe = PrepPipeline(prep, paths, batch=8, seed=1, window=2,
+                        adaptive_window=True, max_window=4,
+                        depth_low=1.0, depth_high=4.0)
+
+    class _Off:
+        def __init__(self):
+            self.depths = {}
+
+        def queue_depth_ewma(self):
+            return dict(self.depths)
+
+    stub = _Off()
+    pipe.prep.off = stub
+    # shallow targets → additive increase up to max_window, never past
+    stub.depths = {"storage0": 0.1, "storage1": 0.2}
+    for _ in range(10):
+        pipe._adapt_window()
+    assert pipe.window == 4 == pipe.window_max_seen
+    # deep queues → back off toward 1, never below
+    stub.depths = {"storage0": 9.0, "storage1": 7.0}
+    for _ in range(10):
+        pipe._adapt_window()
+    assert pipe.window == 1 == pipe.window_min_seen
+    # inside the band → hold
+    stub.depths = {"storage0": 2.0, "storage1": 2.5}
+    assert pipe._adapt_window() == 1
+    # static pipelines never move
+    static = PrepPipeline(prep, paths, batch=8, seed=1, window=3)
+    static.prep.off = stub
+    assert static._adapt_window() == 3 and static.window == 3
+
+
+def test_adaptive_window_delivers_identical_batches():
+    """The determinism contract: the adaptive window changes only how far
+    ahead the producer runs, never batch content or order."""
+    golden = None
+    for adaptive in (False, True):
+        dev, fs, fabric, engines, off = build_plane(2)
+        prep = OffloadPrep(fs, off, out_size=16, offload_ratio=0.2)
+        paths = prep.materialize_corpus(24, max_side=64)
+        pipe = PrepPipeline(prep, paths, batch=8, epochs=2, seed=7,
+                            window=1, adaptive_window=adaptive,
+                            max_window=6, depth_low=5.0)  # always widens
+        got = _collect(pipe)
+        assert len(got) == 6
+        if adaptive:
+            assert pipe.window_max_seen > 1  # the controller actually ran
+        if golden is None:
+            golden = got
+        else:
+            for a, b in zip(golden, got):
+                assert np.array_equal(a, b)

@@ -122,6 +122,20 @@ def test_router_schedule_never_leaks_leases(seed):
     run_router_schedule(random.Random(seed))
 
 
+# --------------------------------------- memtier coherence invariant
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_memtier_schedule_never_serves_stale_bytes(seed):
+    """THE cache-coherence invariant (PR 10): a MemTier-attached read is
+    byte-identical to the direct NVMe read after ANY interleaving of
+    writes, truncates, deletes, (crashing) migrations, orphan reclaims
+    and cache-node kill/revive — zero stale reads, zero leaked leases
+    (mirrored with fixed seeds in tests/test_invariants_fallback.py)."""
+    from memtier_util import run_memtier_schedule
+
+    run_memtier_schedule(random.Random(seed))
+
+
 # ------------------------------------ pushdown differential invariant
 @settings(max_examples=8, deadline=None)
 @given(st.integers(0, 2**31 - 1))

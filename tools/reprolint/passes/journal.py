@@ -7,8 +7,15 @@ would see its blocks recycled under it, and a crash between the mutation
 and the journal record would leave the on-device lease journal pointing at
 state that no longer exists.
 
+The same discipline covers the remote-memory cache tier (``memtier.py``
+and its ``fs.py`` call sites): a cache invalidation or fence riding a
+free/trim path (``*.memtier.invalidate(...)``, ``*.memtier.fence(...)``)
+is itself a coherence mutation — issued without the lease fence first, it
+could race a grant and leave the tier serving pre-fence bytes.
+
 The checkable discipline: every call to a block-state mutator
-(``*.extmgr.free(...)``, ``*.dev.trim(...)``) must be *dominated* — earlier
+(``*.extmgr.free(...)``, ``*.dev.trim(...)``, ``*.memtier.invalidate(...)``,
+``*.memtier.fence(...)``) must be *dominated* — earlier
 in the same function body, nested defs excluded — by a lease fence:
 
   * a lease check (``_check_not_leased``), or
@@ -31,12 +38,14 @@ from tools.reprolint.core import (Finding, ParsedModule, call_name, dotted,
                                   function_bodies, own_nodes)
 
 RULE = "journal-before-mutate"
-DOC = ("extmgr.free / dev.trim in the extent-lease core not dominated by a "
-       "lease check, scoped lease, or lease-journal record")
+DOC = ("extmgr.free / dev.trim / memtier.invalidate / memtier.fence in the "
+       "extent-lease core not dominated by a lease check, scoped lease, or "
+       "lease-journal record")
 
-FILES = ("fs.py", "extents.py", "rebalance.py")
+FILES = ("fs.py", "extents.py", "rebalance.py", "memtier.py")
 
-_MUTATORS = (("extmgr", "free"), ("dev", "trim"))
+_MUTATORS = (("extmgr", "free"), ("dev", "trim"),
+             ("memtier", "invalidate"), ("memtier", "fence"))
 _GUARD_CALLS = {"_check_not_leased", "lease_scope", "write_lease",
                 "read_lease", "grant_lease"}
 _JOURNAL_OPS = {"append_grant", "append_release", "compact", "replay",

@@ -9,6 +9,10 @@ invert a layer silently. Rules (source prefix → forbidden prefixes):
   * ``repro.core``    ✗→ ``repro.serve``, ``repro.sim``, ``repro.data``
   * ``repro.kernels`` ✗→ ``repro.core``
   * ``repro.sim``     ✗→ ``repro.serve``
+  * ``repro.core.memtier`` ✗→ ``repro.core.fs``, ``repro.core.engine``,
+    ``repro.core.offloader``, ``repro.core.router`` — the cache tier sits
+    BELOW the file system: fs/engine/router import memtier, never the
+    reverse (coherence is driven top-down by the lease plane).
 
 Both module-level and function-level (lazy) imports are checked — a lazy
 import still creates the dependency. Only ``src/``-rooted modules have a
@@ -23,12 +27,15 @@ from tools.reprolint.core import Finding, ParsedModule
 
 RULE = "layering"
 DOC = ("import-graph DAG: core never imports serve/sim/data, kernels "
-       "never imports core, sim never imports serve")
+       "never imports core, sim never imports serve, memtier never "
+       "imports the fs/engine/offloader/router layers above it")
 
 LAYER_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
     ("repro.core", ("repro.serve", "repro.sim", "repro.data")),
     ("repro.kernels", ("repro.core",)),
     ("repro.sim", ("repro.serve",)),
+    ("repro.core.memtier", ("repro.core.fs", "repro.core.engine",
+                            "repro.core.offloader", "repro.core.router")),
 )
 
 
